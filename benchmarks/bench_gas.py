@@ -1,0 +1,72 @@
+"""Paper Table I: gas consumption L1 vs L2 (commit/verify/execute).
+
+Replays the table's call counts through the calibrated gas model AND through
+the live Rollup engine (core/rollup.py), checking both against the paper's
+published numbers and the 'up to 20x' headline claim.
+"""
+from __future__ import annotations
+
+from repro.core.gas import (DEFAULT_GAS, FUNCTIONS, gas_reduction, l1_gas,
+                            l2_gas)
+from repro.core.ledger import Chain, Tx
+from repro.core.rollup import Rollup
+
+# Table I ground truth (Total column), for tolerance checks.
+PAPER_L2_TOTAL = {
+    ("publishTask", 5): 112536, ("publishTask", 20): 183908,
+    ("publishTask", 50): 416384, ("publishTask", 100): 742115,
+    ("submitLocalModel", 5): 95824, ("submitLocalModel", 20): 123552,
+    ("submitLocalModel", 50): 241568, ("submitLocalModel", 100): 408824,
+    ("calculateObjectiveRep", 5): 88886, ("calculateObjectiveRep", 20): 97676,
+    ("calculateObjectiveRep", 50): 182360,
+    ("calculateObjectiveRep", 100): 273212,
+    ("calculateSubjectiveRep", 5): 87280, ("calculateSubjectiveRep", 20): 93044,
+    ("calculateSubjectiveRep", 50): 165728,
+    ("calculateSubjectiveRep", 100): 238020,
+}
+PAPER_L1_TOTAL = {
+    ("publishTask", 5): 910931, ("publishTask", 100): 17736655,
+    ("submitLocalModel", 100): 4135650,
+    ("calculateObjectiveRep", 100): 4299248,
+    ("calculateSubjectiveRep", 100): 3523732,
+}
+
+
+def run_live_rollup(fn: str, n_calls: int) -> int:
+    """Push n_calls through the live Rollup engine; sum settled gas."""
+    chain = Chain()
+    ru = Rollup(chain)
+    for i in range(n_calls):
+        ru.submit(Tx(fn, f"c{i}", {}, 0, i * 0.01))
+    ru.flush()
+    return sum(b["total"] for b in ru.gas_log)
+
+
+def run():
+    rows = []
+    max_red = 0.0
+    for fn in FUNCTIONS:
+        for n in (5, 20, 50, 100):
+            model_l2 = l2_gas(fn, n)["total"]
+            live_l2 = run_live_rollup(fn, n)
+            l1 = l1_gas(fn, n)
+            red = gas_reduction(fn, n)
+            max_red = max(max_red, red)
+            paper = PAPER_L2_TOTAL[(fn, n)]
+            rel = abs(model_l2 - paper) / paper
+            assert rel < 0.15, (fn, n, model_l2, paper, rel)
+            assert abs(live_l2 - model_l2) / model_l2 < 0.1, \
+                (fn, n, live_l2, model_l2)
+            if (fn, n) in PAPER_L1_TOTAL:
+                rel1 = abs(l1 - PAPER_L1_TOTAL[(fn, n)]) / PAPER_L1_TOTAL[(fn, n)]
+                assert rel1 < 0.05, (fn, n, l1, rel1)
+            rows.append({"fn": fn, "n": n, "L1": l1, "L2_model": model_l2,
+                         "L2_live": live_l2, "paper_L2": paper,
+                         "reduction": round(red, 1)})
+    assert max_red >= 20.0, f"paper claims up to 20x, got {max_red}"
+    return {"max_reduction": round(max_red, 1), "rows": rows}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,41 @@
+"""Paper Fig. 4: L1 throughput and latency vs transaction send rate.
+
+Sweeps send rates for each of the four main functions on the QBFT chain
+simulator; asserts the paper's saturation phenomenology (submitLocalModel
+peaks near ~180 TPS around a 320 TPS send rate; heavier functions saturate
+lower; latency rises sharply past saturation).
+"""
+from __future__ import annotations
+
+from repro.core.gas import FUNCTIONS
+from repro.core.ledger import simulate_load
+
+SEND_RATES = (20, 40, 80, 160, 320, 640)
+
+
+def run(duration: float = 20.0):
+    table = {}
+    for fn in FUNCTIONS:
+        rows = []
+        for rate in SEND_RATES:
+            m = simulate_load(fn, rate, duration=duration)
+            rows.append({"send_rate": rate,
+                         "throughput": round(m["throughput"], 1),
+                         "latency_s": round(m["latency"], 3)})
+        table[fn] = rows
+
+    sub = {r["send_rate"]: r for r in table["submitLocalModel"]}
+    assert 160 <= sub[320]["throughput"] <= 200, \
+        f"submitLocalModel should peak ~180 TPS, got {sub[320]['throughput']}"
+    assert sub[640]["latency_s"] > 4 * sub[80]["latency_s"], \
+        "latency must rise sharply past saturation"
+    pub = {r["send_rate"]: r for r in table["publishTask"]}
+    assert pub[320]["throughput"] < sub[320]["throughput"], \
+        "heavier publishTask saturates below submitLocalModel"
+    peak = max(r["throughput"] for r in table["submitLocalModel"])
+    return {"peak_tps_submitLocalModel": peak, "table": table}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

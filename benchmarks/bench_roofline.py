@@ -1,0 +1,75 @@
+"""Roofline report: reads the dry-run JSONs (results/dryrun/) and renders the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            cells.append(json.load(open(f)))
+        except Exception:
+            pass
+    return cells
+
+
+def run(require_all_ok: bool = False):
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    err = [c for c in cells if c.get("status") == "error"]
+    rows = []
+    for c in ok:
+        if "roofline" not in c:
+            continue
+        r, w = c["roofline"], c["walk"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"].replace("_s", ""),
+            "roofline_frac": round(r.get("roofline_fraction", 0.0), 4),
+            "useful_flops_ratio": round(r.get("useful_flops_ratio", 0.0), 3),
+            "peak_GiB": round(c["memory"]["peak_bytes_est"] / 2 ** 30, 2),
+            "fits_hbm": c.get("fits_hbm"),
+        })
+    if require_all_ok:
+        assert not err, [f"{c['arch']}/{c['shape']}/{c['mesh']}" for c in err]
+    summary = {
+        "n_ok": len(ok), "n_error": len(err),
+        "n_skipped": len([c for c in cells if c.get("status") == "skipped"]),
+        "dominant_histogram": {},
+    }
+    for r in rows:
+        d = r["dominant"]
+        summary["dominant_histogram"][d] = \
+            summary["dominant_histogram"].get(d, 0) + 1
+    return {"summary": summary, "rows": rows}
+
+
+def markdown_table(rows, mesh="single"):
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | frac | useful | peak GiB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+            f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
+            f"{r['roofline_frac']} | {r['useful_flops_ratio']} | "
+            f"{r['peak_GiB']} | {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    out = run()
+    print(json.dumps(out["summary"], indent=1))
+    print(markdown_table(out["rows"]))

@@ -1,0 +1,58 @@
+"""Benchmark driver — one entry per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV:
+  * name        — paper artifact the benchmark reproduces
+  * us_per_call — wall time of one benchmark unit (microseconds)
+  * derived     — the headline metric(s) the paper reports
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (bench_gas, bench_l1_throughput,
+                            bench_l2_throughput, bench_latency,
+                            bench_reputation, bench_roofline)
+
+    print("name,us_per_call,derived")
+
+    out, us = _timed(bench_reputation.run)
+    print(f"fig3_reputation_dynamics,{us:.0f},"
+          f"good={out['good_final']:.3f}|malicious={out['malicious_final']:.3f}"
+          f"|lazy={out['lazy_final']:.3f}")
+
+    out, us = _timed(bench_l1_throughput.run)
+    print(f"fig4_l1_throughput_latency,{us:.0f},"
+          f"peak_tps_submitLocalModel={out['peak_tps_submitLocalModel']:.0f}")
+
+    out, us = _timed(bench_gas.run)
+    n_rows = len(out["rows"])
+    print(f"table1_gas_l1_vs_l2,{us / max(n_rows, 1):.0f},"
+          f"max_gas_reduction={out['max_reduction']}x")
+
+    out, us = _timed(bench_l2_throughput.run)
+    print(f"fig5_l2_vs_l1_throughput,{us:.0f},"
+          f"avg_l2_tps={out['avg_l2_tps']:.0f}|best_l2_tps={out['best_l2_tps']:.0f}")
+
+    out, us = _timed(bench_latency.run)
+    print(f"table2_l2_latency,{us / max(len(out['rows']), 1):.0f},"
+          f"worst_rel_err={out['worst_rel_err_n>=10']}")
+
+    out, us = _timed(bench_roofline.run)
+    s = out["summary"]
+    print(f"roofline_dryrun_cells,{us:.0f},"
+          f"ok={s['n_ok']}|err={s['n_error']}|skip={s['n_skipped']}"
+          f"|dominant={s['dominant_histogram']}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,462 @@
+"""HLO cost walker: loop-aware FLOP / byte / collective accounting.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body exactly ONCE (no
+trip-count multiplier) — measured on this container, a scanned 8-step matmul
+reports 1/8 of the unrolled FLOPs.  Since every layer stack in this framework
+is scanned (HLO-size hygiene), we walk the post-SPMD HLO text ourselves:
+
+  * while loops  -> body cost x trip count (trip parsed from the condition)
+  * fusions      -> internal FLOPs counted, internal bytes NOT (VMEM-local)
+  * collectives  -> payload bytes per kind, loop-multiplied, with group size
+  * dots         -> 2 * prod(out) * prod(contracting)
+
+The walker is validated against cost_analysis() on loop-free programs
+(tests/test_hlo_cost.py) and against analytic 6*N*D model FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "sqrt", "rsqrt", "cbrt", "sine", "cosine", "tan", "atan2",
+    "erf", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "clamp", "remainder", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "is-finite", "expm1", "log1p",
+}
+
+_NO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    shapes: List[Shape]          # output shapes (tuple flattened)
+    operands: List[str]
+    attrs: str                   # raw attr text after the operand list
+    line: str
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(s.bytes for s in self.shapes)
+
+    @property
+    def out_elems(self) -> int:
+        return sum(s.elems for s in self.shapes)
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    convert_bytes: float = 0.0   # bf16<->f32 converts (CPU-backend artifact)
+    collective_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    custom_calls: List[str] = dataclasses.field(default_factory=list)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "CompCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.convert_bytes += other.convert_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) + v * mult
+        self.custom_calls.extend(other.custom_calls)
+        self.warnings.extend(other.warnings)
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shapes(type_str: str) -> List[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype = m.group(1)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = tuple(int(x) for x in m.group(2).split(",") if x)
+        out.append(Shape(dtype, dims))
+    return out
+
+
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE opcode(operands), attrs'.  TYPE may be a tuple
+    containing /*index=N*/ comments, so scan balanced parens manually."""
+    m = _OP_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):           # tuple type: find matching close paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:                               # plain type token
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    rest = rest.lstrip()
+    m2 = re.match(r"([\w\-]+)\(", rest)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    return name, type_str, opcode, rest[m2.end():]
+
+
+def _split_operands_attrs(rest: str) -> Tuple[str, str]:
+    """rest starts after the opening '(' of the op."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._symbol: Dict[str, Dict[str, List[Shape]]] = {}
+        for cname, ops in self.computations.items():
+            self._symbol[cname] = {op.name: op.shapes for op in ops}
+        self._memo: Dict[str, CompCost] = {}
+
+    def _parse(self, text: str):
+        current = None
+        is_entry = False
+        for line in text.splitlines():
+            if not line.strip():
+                continue
+            if line.startswith("HloModule"):
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and ("->" in line) and line.rstrip().endswith("{"):
+                current = hdr.group(1)
+                self.computations[current] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = current
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            parsed = _parse_op_line(line)
+            if not parsed:
+                continue
+            name, type_str, opcode, rest = parsed
+            operands_str, attrs = _split_operands_attrs(rest)
+            operands = re.findall(r"%([\w.\-]+)", operands_str)
+            self.computations[current].append(
+                Op(name, opcode, parse_shapes(type_str), operands, attrs, line))
+
+    # -- helpers ----------------------------------------------------------------
+    def _operand_shapes(self, comp: str, op: Op) -> List[Shape]:
+        table = self._symbol[comp]
+        shapes = []
+        for o in op.operands:
+            shapes.extend(table.get(o, []))
+        return shapes
+
+    def _trip_count(self, cond_comp: str) -> Tuple[float, Optional[str]]:
+        ops = self.computations.get(cond_comp, [])
+        consts = []
+        for op in ops:
+            if op.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    consts.append(int(m.group(1)))
+        if consts:
+            return float(max(consts)), None
+        return 1.0, f"unparseable trip count in {cond_comp}"
+
+    @staticmethod
+    def _group_size(attrs: str, default: float = 2.0) -> float:
+        # replica_groups=[8,4]<=[32]  -> groups of 4;  or explicit {{0,1},{2,3}}
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+        if m:
+            return float(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+        if m:
+            return float(len(m.group(1).split(",")))
+        return default
+
+    def _fusion_param_bytes(self, comp: str, operand_shapes) -> float:
+        """Sum effective read bytes across a fused computation's parameters.
+
+        A param consumed only through slicing ops reads just the windows; a
+        param consumed only as the DESTINATION (operand 0) of
+        dynamic-update-slice is aliased in place (0 bytes)."""
+        ops = self.computations.get(comp, [])
+        params: Dict[int, str] = {}
+        for op in ops:
+            if op.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.line)
+                if m:
+                    params[int(m.group(1))] = op.name
+        total = 0.0
+        for idx, pname in params.items():
+            if idx >= len(operand_shapes):
+                continue
+            full = operand_shapes[idx].bytes
+            consumers = [o for o in ops if pname in o.operands]
+            if not consumers:
+                continue
+            eff = 0.0
+            cheap = True
+            for o in consumers:
+                if o.opcode in ("slice", "dynamic-slice", "gather"):
+                    eff += o.out_bytes
+                elif (o.opcode == "dynamic-update-slice"
+                      and o.operands and o.operands[0] == pname):
+                    eff += 0.0          # aliased in-place destination
+                elif o.opcode in ("bitcast", "get-tuple-element"):
+                    cheap = False       # view feeding unknown uses: be safe
+                    break
+                else:
+                    cheap = False
+                    break
+            total += eff if cheap else full
+        if not params:
+            return sum(s.bytes for s in operand_shapes)
+        return total
+
+    def _fusion_out_bytes(self, comp: str, op: Op) -> float:
+        ops = self.computations.get(comp, [])
+        by_name = {o.name: o for o in ops}
+        root = None
+        for o in ops:
+            if o.line.lstrip().startswith("ROOT"):
+                root = o
+                break
+        # unwrap bitcast/tuple around a dynamic-update-slice root
+        seen = 0
+        while root is not None and root.opcode in ("bitcast", "tuple") \
+                and root.operands and seen < 4:
+            root = by_name.get(root.operands[0])
+            seen += 1
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = self._operand_shapes(comp, root)
+            if len(upd) > 1:
+                return float(upd[1].bytes)
+        return float(op.out_bytes)
+
+    # -- cost walk ---------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None, _fused: bool = False) -> CompCost:
+        comp = comp or self.entry
+        key = (comp, _fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = CompCost()
+        for op in self.computations.get(comp, []):
+            total.add(self._op_cost(comp, op, _fused))
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, comp: str, op: Op, fused: bool) -> CompCost:
+        c = CompCost()
+        oc = op.opcode
+        operand_shapes = self._operand_shapes(comp, op)
+        in_bytes = sum(s.bytes for s in operand_shapes)
+
+        if oc == "while":
+            m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+            b = re.search(r"body=%?([\w.\-]+)", op.attrs)
+            trip, warn = self._trip_count(m.group(1)) if m else (1.0, "no cond")
+            if warn:
+                c.warnings.append(warn)
+            if b:
+                c.add(self.cost(b.group(1)), trip)
+            return c
+        if oc == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            called = m.group(1) if m else None
+            if called:
+                sub = self.cost(called, _fused=True)
+                c.flops += sub.flops
+                c.transcendentals += sub.transcendentals
+                c.collective_bytes += sub.collective_bytes
+                c.collective_wire_bytes += sub.collective_wire_bytes
+                for k, v in sub.collectives.items():
+                    c.collectives[k] = c.collectives.get(k, 0) + v
+                c.custom_calls.extend(sub.custom_calls)
+                c.warnings.extend(sub.warnings)
+            if not fused:
+                # Effective boundary traffic: a param consumed ONLY through
+                # slicing ops inside the fusion reads just the window; a
+                # root dynamic-update-slice writes just the update (aliased).
+                eff_in = self._fusion_param_bytes(called, operand_shapes) \
+                    if called else in_bytes
+                eff_out = self._fusion_out_bytes(called, op) if called \
+                    else op.out_bytes
+                c.bytes += eff_in + eff_out
+            return c
+        if oc in ("call", "conditional"):
+            for target in re.findall(
+                    r"(?:to_apply|branch_computations=\{|true_computation|false_computation)=?%?([\w.\-]+)",
+                    op.attrs):
+                c.add(self.cost(target))
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        base = oc
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        if base in _COLLECTIVES:
+            if oc.endswith("-done"):
+                return c
+            payload = max(in_bytes, op.out_bytes)
+            n = self._group_size(op.attrs)
+            if base == "all-reduce":
+                wire = 2.0 * payload * (n - 1) / n
+            elif base in ("all-gather", "reduce-scatter", "all-to-all"):
+                wire = payload * (n - 1) / n
+            else:  # collective-permute / broadcast
+                wire = payload
+            c.collective_bytes += payload
+            c.collective_wire_bytes += wire
+            c.collectives[base] = c.collectives.get(base, 0) + payload
+            c.collective_counts[base] = c.collective_counts.get(base, 0) + 1
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc == "custom-call":
+            c.custom_calls.append(op.line.strip()[:160])
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc == "dot":
+            out_elems = op.out_elems
+            lhs = operand_shapes[0] if operand_shapes else Shape("f32", ())
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            contract = 1
+            if m and m.group(1):
+                for d in m.group(1).split(","):
+                    contract *= lhs.dims[int(d)]
+            c.flops += 2.0 * out_elems * contract
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc == "convolution":
+            out_elems = op.out_elems
+            # kernel = operand 1: prod(all dims except output-feature dim)
+            ker = operand_shapes[1] if len(operand_shapes) > 1 else Shape("f32", (1,))
+            m = re.search(r"dim_labels=\w+_(\w+)->", op.attrs)
+            ker_prod = ker.elems
+            if m:
+                lbl = m.group(1)
+                o_idx = lbl.index("o")
+                ker_prod = ker.elems // max(ker.dims[o_idx], 1)
+            c.flops += 2.0 * out_elems * ker_prod
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc in ("reduce", "reduce-window"):
+            c.flops += float(sum(s.elems for s in operand_shapes[: max(1, len(operand_shapes) // 2)]))
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc == "convert":
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+                c.convert_bytes += in_bytes + op.out_bytes
+            return c
+        if oc in _ELEMENTWISE:
+            c.flops += float(op.out_elems)
+            if oc in ("exponential", "log", "tanh", "logistic", "sqrt", "rsqrt",
+                      "sine", "cosine", "power", "erf", "expm1", "log1p"):
+                c.transcendentals += float(op.out_elems)
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        if oc in _NO_BYTES:
+            return c
+        # slicing/gather ops only touch the selected window, not the full
+        # operand (and DUS/scatter alias their buffer in place): count the
+        # moved window, not the whole array.
+        if oc in ("slice", "dynamic-slice", "gather"):
+            if not fused:
+                c.bytes += 2.0 * op.out_bytes
+            return c
+        if oc in ("dynamic-update-slice", "scatter"):
+            upd = operand_shapes[1].bytes if len(operand_shapes) > 1 else op.out_bytes
+            if not fused:
+                c.bytes += 2.0 * upd
+            if oc == "scatter":
+                c.flops += float(operand_shapes[-1].elems if operand_shapes else 0)
+            return c
+        if oc == "broadcast":
+            if not fused:
+                c.bytes += in_bytes + op.out_bytes
+            return c
+        # data movement (copy, transpose, reshape, concatenate, reverse, pad...)
+        if not fused:
+            c.bytes += in_bytes + op.out_bytes
+        return c
+
+
+def analyze(compiled_text: str) -> CompCost:
+    return HloModule(compiled_text).cost()

@@ -1,0 +1,76 @@
+"""Analytic MODEL_FLOPS per step: the 'useful work' yardstick for the
+roofline ratio MODEL_FLOPS / HLO_FLOPs.
+
+Conventions (per roofline spec):
+  dense train        6 * N * D          (N params, D tokens)
+  MoE train          6 * N_active * D
+  prefill            2 * N(_active) * D
+  decode             2 * N(_active) * B  (one token per sequence)
+plus the attention quadratic term (not captured by 6ND):
+  causal train       ~12 * L_attn * H * dh * S^2/2 * B   (fwd 4*, bwd 8*, causal /2)
+  prefill            ~4  * L_attn * H * dh * S^2/2 * B
+  decode             ~4  * L_attn * H * dh * S * B
+"""
+from __future__ import annotations
+
+from repro.configs.base import ATTN, ModelConfig, ShapeConfig
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.enc_dec:
+        return cfg.n_layers + cfg.n_enc_layers
+    return sum(1 for k in cfg.pattern if k == ATTN) * cfg.n_periods
+
+
+def exact_param_counts(params_shape, cfg: ModelConfig):
+    """(N_total, N_active) from the real params tree: excludes the input
+    embedding table (gather, not matmul) and counts only top_k/E of each
+    MoE expert stack as active."""
+    total = active = 0
+
+    def walk(path, node):
+        nonlocal total, active
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (k,), v)
+            return
+        if path and path[-1] == "table":
+            return                      # input embedding: no matmul flops
+        n = 1
+        for d in node.shape:
+            n *= d
+        total += n
+        if cfg.moe is not None and path and path[-1].startswith("moe_w"):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    walk((), params_shape)
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                params_shape=None) -> dict:
+    if params_shape is not None:
+        _, n_act = exact_param_counts(params_shape, cfg)
+        n = n_act
+    else:
+        n = cfg.param_count()
+        n_act = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    D = B * S
+    L = n_attn_layers(cfg)
+    attn_inner = cfg.n_heads * cfg.head_dim
+
+    if shape.kind == "train":
+        base = 6.0 * n_act * D
+        # 12 * L * (H*dh) * (S/2) per token, over D tokens
+        attn = 12.0 * L * attn_inner * (S / 2.0) * D
+    elif shape.kind == "prefill":
+        base = 2.0 * n_act * D
+        attn = 4.0 * L * attn_inner * (S / 2.0) * D
+    else:  # decode: one token per sequence, full-depth KV read
+        D = B
+        base = 2.0 * n_act * B
+        attn = 4.0 * L * attn_inner * S * B
+    return {"model_flops": base, "attn_flops": attn,
+            "model_flops_total": base + attn, "tokens": D}

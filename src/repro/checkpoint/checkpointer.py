@@ -1,0 +1,167 @@
+"""Content-addressed, atomic, sharded checkpointing (the IPFS analogue).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        # leaf paths, shapes, dtypes, blob cids, hash
+        blobs/<cid>.npy      # one blob per leaf (content-addressed)
+    <dir>/LATEST             # atomic pointer file
+
+Guarantees:
+  * atomic publish (manifest written last, LATEST renamed last);
+  * integrity: every blob re-hashed on restore (tamper/corruption check);
+  * dedup: unchanged leaves (same cid) are not rewritten across steps;
+  * async save (background thread) keeps the train loop hot.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (str(k),), v)
+        elif hasattr(node, "shape") or np.isscalar(node):
+            flat["/".join(path)] = node
+        else:
+            raise TypeError(
+                f"checkpointer stores dict-of-array pytrees; got "
+                f"{type(node).__name__} at {'/'.join(path)!r} — convert "
+                f"dataclass nodes to dicts first (see launch/train.py)")
+    walk((), tree)
+    return flat
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        node = root
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def _cid(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()[:32]
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype that understands ml_dtypes names (bfloat16, float8_*...)."""
+    try:
+        dt = np.dtype(name)
+        if dt != np.dtype(object):
+            return dt
+    except TypeError:
+        pass
+    import ml_dtypes
+    return np.dtype(getattr(ml_dtypes, name))
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(os.path.join(self.dir, "blobs"), exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        flat = {k: np.asarray(v) for k, v in _leaf_paths(tree).items()}
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for path, arr in flat.items():
+            # npy round-trips bfloat16 poorly; store raw bytes + dtype str
+            raw = arr.tobytes()
+            cid = hashlib.sha256(raw).hexdigest()[:32]
+            blob = os.path.join(self.dir, "blobs", cid + ".bin")
+            if not os.path.exists(blob):
+                tmp = blob + f".tmp{os.getpid()}"
+                with open(tmp, "wb") as f:
+                    f.write(raw)
+                os.replace(tmp, blob)
+            manifest["leaves"][path] = {
+                "cid": cid, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        step_dir = os.path.join(self.dir, f"step_{step:09d}")
+        os.makedirs(step_dir, exist_ok=True)
+        mtmp = os.path.join(step_dir, "manifest.json.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(step_dir, "manifest.json"))
+        # atomic LATEST pointer
+        ltmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(ltmp, "w") as f:
+            f.write(f"step_{step:09d}")
+        os.replace(ltmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return manifest
+
+    def save_async(self, step: int, tree, extra: Optional[Dict] = None):
+        # snapshot to host BEFORE backgrounding (device buffers may be donated)
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self.save, args=(step, host_tree, extra), daemon=True)
+        self._async_thread.start()
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # -- restore -------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip().split("_")[-1])
+
+    def restore(self, step: Optional[int] = None) -> Tuple[Any, Dict]:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError("no checkpoint found")
+        step_dir = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for path, meta in manifest["leaves"].items():
+            blob = os.path.join(self.dir, "blobs", meta["cid"] + ".bin")
+            with open(blob, "rb") as fb:
+                raw = fb.read()
+            if hashlib.sha256(raw).hexdigest()[:32] != meta["cid"]:
+                raise IOError(f"checkpoint blob corrupted: {path}")
+            arr = np.frombuffer(raw, dtype=_np_dtype(meta["dtype"]))
+            flat[path] = arr.reshape(meta["shape"]).copy()
+        return _unflatten(flat), manifest["extra"]
+
+    # -- retention -------------------------------------------------------------------
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+        # drop unreferenced blobs
+        live = set()
+        for d in steps[-self.keep:]:
+            mf = os.path.join(self.dir, d, "manifest.json")
+            if os.path.exists(mf):
+                with open(mf) as f:
+                    live.update(m["cid"] for m in
+                                json.load(f)["leaves"].values())
+        blob_dir = os.path.join(self.dir, "blobs")
+        for b in os.listdir(blob_dir):
+            if b.split(".")[0] not in live:
+                os.remove(os.path.join(blob_dir, b))

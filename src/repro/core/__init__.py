@@ -1,0 +1,12 @@
+"""AutoDFL core: the paper's contribution as composable JAX modules.
+
+reputation  — Eq. 2-10 reputation model (objective/subjective/local/update)
+aggregation — Eq. 1 reputation-weighted FedAvg (stacked / mesh-psum paths)
+rollup      — zk-Rollup L2 batching engine + TPU rollup-round analogue
+ledger      — L1 permissioned chain simulator (QBFT, mempool, gas blocks)
+gas         — Table-I-calibrated gas cost model
+oracle      — DON quorum evaluation / aggregation cross-verification
+tasks       — TSC task lifecycle (publishTask / selectTrainers / submit)
+escrow      — DSC deposits, rewards, slashing
+storage     — IPFS-style content-addressed blob store
+"""

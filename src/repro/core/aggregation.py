@@ -1,0 +1,63 @@
+"""Reputation-weighted aggregation (paper Eq. 1): w_g = sum(s_i w_i) / sum(s_i).
+
+Three call paths:
+  * stacked        — trainers on a leading axis (oracle / CPU FL path);
+                     optionally dispatched to the Pallas `weighted_agg` kernel.
+  * mesh-sharded   — trainers mapped to the mesh `data`(x`pod`) axes; the
+                     aggregation is a weighted psum (the rollup commit).
+  * pytree         — convenience wrapper over full parameter pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_average_flat(stacked: jnp.ndarray, scores: jnp.ndarray,
+                          use_pallas: bool = False) -> jnp.ndarray:
+    """stacked: (n, P) trainer weights; scores: (n,) -> (P,)."""
+    if use_pallas:
+        from repro.kernels.ops import weighted_agg
+        return weighted_agg(stacked, scores)
+    s = scores.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(s), 1e-12)
+    return (jnp.einsum("np,n->p", stacked.astype(jnp.float32), s)
+            / denom).astype(stacked.dtype)
+
+
+def weighted_average_tree(stacked_tree, scores, use_pallas: bool = False):
+    """Pytree whose leaves carry a leading trainer axis."""
+    def leaf(x):
+        flat = x.reshape(x.shape[0], -1)
+        out = weighted_average_flat(flat, scores, use_pallas)
+        return out.reshape(x.shape[1:])
+    return jax.tree.map(leaf, stacked_tree)
+
+
+def weighted_psum_tree(local_tree, score, axis_names):
+    """Mesh path: each `data`-axis group holds ONE trainer's params.
+
+    local_tree: this trainer's params; score: this trainer's scalar score.
+    Returns the Eq. 1 average, identical on all groups (one weighted
+    all-reduce over ``axis_names`` — this is the rollup 'commit').
+    """
+    denom = jax.lax.psum(score.astype(jnp.float32), axis_names)
+
+    def leaf(x):
+        num = jax.lax.psum(x.astype(jnp.float32) * score.astype(jnp.float32),
+                           axis_names)
+        return (num / jnp.maximum(denom, 1e-12)).astype(x.dtype)
+    return jax.tree.map(leaf, local_tree)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_flat(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])

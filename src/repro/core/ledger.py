@@ -1,0 +1,177 @@
+"""L1 permissioned-chain simulator: accounts/roles, mempool, QBFT quorum,
+gas-limited blocks.  Drives the paper's Fig. 4 (throughput/latency vs send
+rate) and backs the FL task lifecycle (core/tasks.py).
+
+The simulation is discrete-event over block boundaries: transactions arrive
+with timestamps, wait in the mempool, and are packed FIFO into blocks subject
+to the block gas limit.  Latency = confirmation_time - submit_time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.gas import DEFAULT_GAS, GasTable
+
+ROLES = ("admin", "task_publisher", "trainer", "evaluator", "aggregator",
+         "validator", "oracle")
+
+
+@dataclasses.dataclass
+class Tx:
+    fn: str
+    sender: str
+    payload: Dict[str, Any]
+    gas: int
+    submit_time: float
+    tx_id: str = ""
+    confirm_time: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.tx_id:
+            h = hashlib.sha256(
+                json.dumps([self.fn, self.sender, self.submit_time,
+                            sorted(self.payload.items(), key=str)],
+                           default=str).encode()).hexdigest()
+            self.tx_id = h[:16]
+
+
+@dataclasses.dataclass
+class Block:
+    height: int
+    time: float
+    txs: List[Tx]
+    gas_used: int
+    parent: str
+    block_hash: str = ""
+
+    def __post_init__(self):
+        if not self.block_hash:
+            h = hashlib.sha256(
+                (self.parent + str(self.height) +
+                 "".join(t.tx_id for t in self.txs)).encode()).hexdigest()
+            self.block_hash = h[:16]
+
+
+class AccessControl:
+    """ASC: role-based permissioning with admin majority voting (Sybil /
+    whitewashing mitigation — only the consortium can add or re-add users)."""
+
+    def __init__(self, admins: List[str]):
+        self.admins = set(admins)
+        self.roles: Dict[str, set] = {a: {"admin"} for a in admins}
+        self.banned: set = set()
+        self._votes: Dict[str, set] = {}
+
+    def grant(self, admin: str, user: str, role: str):
+        assert admin in self.admins, "only admins grant roles"
+        assert role in ROLES, role
+        if user in self.banned:
+            raise PermissionError("banned identity: consortium vote required")
+        self.roles.setdefault(user, set()).add(role)
+
+    def has_role(self, user: str, role: str) -> bool:
+        return role in self.roles.get(user, ())
+
+    def ban(self, admin: str, user: str):
+        assert admin in self.admins
+        self.banned.add(user)
+        self.roles.pop(user, None)
+
+    def vote_readmit(self, admin: str, user: str) -> bool:
+        """Whitewashing guard: majority admin vote to re-admit."""
+        assert admin in self.admins
+        self._votes.setdefault(user, set()).add(admin)
+        if len(self._votes[user]) * 2 > len(self.admins):
+            self.banned.discard(user)
+            del self._votes[user]
+            return True
+        return False
+
+
+class Chain:
+    """Gas-limited block production with a QBFT-style quorum check."""
+
+    def __init__(self, n_validators: int = 4, block_time: float = 1.0,
+                 block_gas_limit: int = 9_000_000,
+                 gas_table: GasTable = DEFAULT_GAS):
+        assert n_validators >= 4, "QBFT needs >= 3f+1 with f >= 1"
+        self.n_validators = n_validators
+        self.block_time = block_time
+        self.block_gas_limit = block_gas_limit
+        self.gas_table = gas_table
+        self.mempool: deque[Tx] = deque()
+        self.blocks: List[Block] = [Block(0, 0.0, [], 0, "genesis")]
+        self.state: Dict[str, Any] = {}
+        self._handlers: Dict[str, Callable] = {}
+        self.total_gas = 0
+
+    # -- contract surface ------------------------------------------------------
+    def register(self, fn: str, handler: Callable):
+        self._handlers[fn] = handler
+
+    def submit(self, tx: Tx):
+        self.mempool.append(tx)
+
+    def quorum(self, approvals: int) -> bool:
+        return 3 * approvals >= 2 * self.n_validators
+
+    # -- block production ---------------------------------------------------------
+    def produce_block(self, now: float) -> Block:
+        txs, gas_used = [], 0
+        while self.mempool:
+            tx = self.mempool[0]
+            if tx.submit_time > now:
+                break
+            if gas_used + tx.gas > self.block_gas_limit:
+                break
+            self.mempool.popleft()
+            handler = self._handlers.get(tx.fn)
+            if handler is not None:
+                handler(self.state, tx)
+            tx.confirm_time = now
+            txs.append(tx)
+            gas_used += tx.gas
+        # QBFT: 2/3 of validators sign; honest-majority assumption of the paper
+        assert self.quorum(self.n_validators - self.n_validators // 3)
+        blk = Block(len(self.blocks), now, txs, gas_used,
+                    self.blocks[-1].block_hash)
+        self.blocks.append(blk)
+        self.total_gas += gas_used
+        return blk
+
+    def run_until(self, t_end: float):
+        t = self.blocks[-1].time
+        while t < t_end:
+            t += self.block_time
+            self.produce_block(t)
+
+
+def simulate_load(fn: str, send_rate: float, duration: float = 30.0,
+                  gas_table: GasTable = DEFAULT_GAS, seed: int = 0,
+                  block_time: float = 1.0,
+                  block_gas_limit: int = 9_000_000) -> Dict[str, float]:
+    """Fig. 4 experiment: constant send rate of one function type."""
+    rng = np.random.default_rng(seed)
+    chain = Chain(block_time=block_time, block_gas_limit=block_gas_limit,
+                  gas_table=gas_table)
+    n = int(send_rate * duration)
+    times = np.sort(rng.uniform(0.0, duration, n))
+    gas = gas_table.l1_per_call[fn]
+    for i, t in enumerate(times):
+        chain.submit(Tx(fn, f"client{i % 64}", {}, gas, float(t)))
+    # run long enough to drain what can be drained, then measure
+    chain.run_until(duration)
+    confirmed = [t for b in chain.blocks for t in b.txs
+                 if t.confirm_time is not None]
+    if not confirmed:
+        return {"send_rate": send_rate, "throughput": 0.0, "latency": 0.0}
+    thr = len(confirmed) / duration
+    lat = float(np.mean([t.confirm_time - t.submit_time for t in confirmed]))
+    return {"send_rate": send_rate, "throughput": thr, "latency": lat,
+            "confirmed": len(confirmed), "submitted": n}

@@ -1,0 +1,82 @@
+"""Decentralized Oracle Network (DON, paper §III-C.5): automated contribution
+evaluation and aggregation, off the chain's critical path.
+
+Each oracle node independently scores every trainer's local model on its own
+slice of the task publisher's validation set; the network aggregates by
+median (robust to a minority of bad-mouthing oracles) and flags outlier
+oracles for slashing.  The paper's 2/3-honest assumption maps to the quorum
+check.  The same quorum machinery cross-verifies the aggregated global model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DONConfig:
+    n_oracles: int = 5
+    outlier_tol: float = 0.15      # |score - median| above this flags oracle
+    quorum_frac: float = 2 / 3
+
+
+def split_validation(val_batch: Dict[str, jnp.ndarray], n_oracles: int):
+    """Disjoint per-oracle validation slices (keeps oracles independent)."""
+    out = []
+    n = len(jax.tree.leaves(val_batch)[0])
+    per = max(1, n // n_oracles)
+    for i in range(n_oracles):
+        sl = slice(i * per, (i + 1) * per if i < n_oracles - 1 else n)
+        out.append(jax.tree.map(lambda a: a[sl], val_batch))
+    return out
+
+
+def evaluate_quorum(eval_fn: Callable, trainer_params: List,
+                    val_batch: Dict[str, jnp.ndarray],
+                    cfg: DONConfig = DONConfig(),
+                    adversarial_oracles: Optional[Dict[int, float]] = None):
+    """Score every trainer's model with every oracle; aggregate by median.
+
+    eval_fn(params, batch) -> scalar score in [0, 1] (e.g. accuracy).
+    adversarial_oracles: {oracle_idx: forged_score} for bad-mouthing tests.
+    Returns (scores (n_trainers,), report).
+    """
+    slices = split_validation(val_batch, cfg.n_oracles)
+    table = np.zeros((cfg.n_oracles, len(trainer_params)), np.float64)
+    for o, sl in enumerate(slices):
+        for t, params in enumerate(trainer_params):
+            s = float(eval_fn(params, sl))
+            if adversarial_oracles and o in adversarial_oracles:
+                s = adversarial_oracles[o]
+            table[o, t] = s
+
+    median = np.median(table, axis=0)                       # robust aggregate
+    dev = np.abs(table - median[None, :]).mean(axis=1)      # per-oracle drift
+    flagged = [o for o in range(cfg.n_oracles) if dev[o] > cfg.outlier_tol]
+    honest = cfg.n_oracles - len(flagged)
+    quorum_ok = honest >= cfg.quorum_frac * cfg.n_oracles
+    report = {
+        "table": table, "median": median, "oracle_deviation": dev,
+        "flagged_oracles": flagged, "quorum_ok": bool(quorum_ok),
+    }
+    return jnp.asarray(median, jnp.float32), report
+
+
+def cross_verify_aggregate(agg_fn: Callable, stacked_params, scores,
+                           cfg: DONConfig = DONConfig(), rtol: float = 1e-4):
+    """Bad-mouthing guard on aggregation: n_oracles independently recompute
+    the Eq. 1 aggregate; accept iff a 2/3 quorum agrees elementwise."""
+    results = [agg_fn(stacked_params, scores) for _ in range(cfg.n_oracles)]
+    ref = results[0]
+    agree = 0
+    for r in results:
+        ok = all(bool(jnp.allclose(a, b, rtol=rtol))
+                 for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(r)))
+        agree += ok
+    if agree < cfg.quorum_frac * cfg.n_oracles:
+        raise RuntimeError("oracle quorum failed on aggregation")
+    return ref, agree

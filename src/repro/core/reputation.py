@@ -1,0 +1,213 @@
+"""AutoDFL reputation model (paper §IV, Eq. 2-10), vectorised over trainers.
+
+All functions are pure jnp and jit/vmap-friendly: the reputation update for a
+whole trainer cohort is one fused kernel-sized computation, and the same code
+runs inside the rollup round (core/rollup.py) and the oracle network
+(core/oracle.py).
+
+Symbols follow the paper:
+  O_rep  objective reputation          (Eq. 2)
+  ND_i   normalised model distance     (Eq. 3)
+  D_i    L2 distance local vs global   (Eq. 4)
+  S_rep  subjective reputation         (Eq. 5-7)
+  L_rep  local reputation              (Eq. 8)
+  R_i    overall reputation            (Eq. 9-10)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ReputationParams:
+    """Consortium-configured constants (paper defaults in parentheses)."""
+
+    tau: float = -1.0        # distance-penalty threshold; <0 => use mean(ND)
+    theta: float = 0.35      # good-behaviour weight (<0.5 punishes bad harder)
+    sigma: float = 0.3       # uncertainty weight in S_rep
+    gamma: float = 0.6       # O_rep vs S_rep blend
+    lam: float = 0.35        # tanh tenure rate (omega = tanh_lam(N))
+    r_min: float = 0.4       # critical trust line
+    r_init: float = 0.5      # newcomer reputation
+    recency_half_life: float = 8.0   # tasks; C_j recency weighting
+
+
+# ---------------------------------------------------------------------------
+# Objective reputation (Eq. 2-4)
+# ---------------------------------------------------------------------------
+def model_distances(local_flat: jnp.ndarray, global_flat: jnp.ndarray):
+    """Eq. 4: D_i = ||w_i - w_g||_2.  local_flat: (n, P); global_flat: (P,)."""
+    diff = local_flat.astype(jnp.float32) - global_flat.astype(jnp.float32)[None]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def normalised_distances(d: jnp.ndarray):
+    """Eq. 3: ND_i = D_i / max_j D_j."""
+    return d / jnp.maximum(jnp.max(d), 1e-12)
+
+
+def objective_reputation(score_auto: jnp.ndarray,
+                         rounds_completed: jnp.ndarray,
+                         rounds_total: jnp.ndarray,
+                         nd: jnp.ndarray,
+                         params: ReputationParams = ReputationParams()):
+    """Eq. 2.  All inputs (n,) vectors over trainers; returns (n,) in [0,1]."""
+    tau = jnp.where(params.tau < 0, jnp.mean(nd), params.tau)
+    penalty = jnp.maximum((nd - tau) / jnp.maximum(1.0 - tau, 1e-9), 0.0)
+    completeness = rounds_completed.astype(jnp.float32) / \
+        jnp.maximum(rounds_total.astype(jnp.float32), 1.0)
+    o = score_auto.astype(jnp.float32) * completeness * (1.0 - penalty)
+    return jnp.clip(o, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Subjective reputation (Eq. 5-7)
+# ---------------------------------------------------------------------------
+def recency_weights(task_ages: jnp.ndarray, half_life: float):
+    """C_j: exponential recency, age 0 = most recent task."""
+    return jnp.exp(-jnp.log(2.0) * task_ages.astype(jnp.float32) / half_life)
+
+
+def subjective_opinion(good_mask: jnp.ndarray, task_ages: jnp.ndarray,
+                       interactions_with: jnp.ndarray,
+                       interactions_total: jnp.ndarray,
+                       params: ReputationParams = ReputationParams()):
+    """Eq. 5-6: returns the opinion (b, d, u) per trainer.
+
+    good_mask: (n, T) 1.0 where task j was judged good (0 padded tasks must
+    have weight 0 via task_ages = +inf).  task_ages: (n, T).
+    """
+    C = recency_weights(task_ages, params.recency_half_life)      # (n,T)
+    alpha = jnp.sum(params.theta * C * good_mask, axis=-1)
+    beta = jnp.sum((1.0 - params.theta) * C * (1.0 - good_mask), axis=-1)
+    i_f = interactions_with.astype(jnp.float32) / \
+        jnp.maximum(interactions_total.astype(jnp.float32), 1.0)
+    u = 1.0 - jnp.clip(i_f, 0.0, 1.0)
+    denom = jnp.maximum(alpha + beta, 1e-9)
+    b = (1.0 - u) * alpha / denom
+    d = (1.0 - u) * beta / denom
+    return b, d, u
+
+
+def subjective_reputation(b, u, params: ReputationParams = ReputationParams()):
+    """Eq. 7: S_rep = b + sigma * u."""
+    return jnp.clip(b + params.sigma * u, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Local reputation + update (Eq. 8-10)
+# ---------------------------------------------------------------------------
+def local_reputation(o_rep, s_rep, params: ReputationParams = ReputationParams()):
+    """Eq. 8."""
+    return params.gamma * o_rep + (1.0 - params.gamma) * s_rep
+
+
+def tenure_weight(n_tasks, params: ReputationParams = ReputationParams()):
+    """Eq. 10: omega = (1 - e^{-lam N}) / (1 + e^{-lam N})."""
+    e = jnp.exp(-params.lam * n_tasks.astype(jnp.float32))
+    return (1.0 - e) / (1.0 + e)
+
+
+def update_reputation(r_prev, l_rep, n_tasks,
+                      params: ReputationParams = ReputationParams()):
+    """Eq. 9: asymmetric tenure-weighted update."""
+    w = tenure_weight(n_tasks, params)
+    good = w * r_prev + (1.0 - w) * l_rep       # L_rep >= R_min branch
+    bad = (1.0 - w) * r_prev + w * l_rep        # L_rep <  R_min branch
+    return jnp.where(l_rep >= params.r_min, good, bad)
+
+
+# ---------------------------------------------------------------------------
+# Fused end-of-task update (what the RSC smart contract computes on-chain;
+# here: one jit-able function over the whole cohort)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainerBook:
+    """Per-trainer running state (the on-chain record)."""
+
+    reputation: jnp.ndarray         # (n,)
+    n_tasks: jnp.ndarray            # (n,) tasks participated in
+    good_history: jnp.ndarray       # (n, T) rolling good/bad bits
+    age_history: jnp.ndarray        # (n, T) task ages (inf = empty slot)
+    interactions_with: jnp.ndarray  # (n,) with this TP
+    interactions_total: jnp.ndarray  # () total TP interactions
+
+
+def end_of_task_update(book: TrainerBook,
+                       score_auto: jnp.ndarray,
+                       rounds_completed: jnp.ndarray,
+                       rounds_total: jnp.ndarray,
+                       distances: jnp.ndarray,
+                       participated: jnp.ndarray,
+                       params: ReputationParams = ReputationParams()):
+    """One task completion: full Eq. 2-10 pipeline for the cohort.
+
+    participated: (n,) 1.0 for trainers in this task (others unchanged).
+    Returns (new_book, diagnostics dict).
+    """
+    nd = normalised_distances(distances)
+    o_rep = objective_reputation(score_auto, rounds_completed, rounds_total,
+                                 nd, params)
+
+    good_now = (o_rep >= params.r_min).astype(jnp.float32)
+    # roll histories: shift ages by one task, insert the new outcome at slot 0
+    age_hist = jnp.where(book.age_history >= jnp.inf, jnp.inf,
+                         book.age_history + 1.0)
+    age_hist = jnp.concatenate(
+        [jnp.where(participated[:, None] > 0, 0.0, jnp.inf),
+         age_hist[:, :-1]], axis=1)
+    good_hist = jnp.concatenate(
+        [good_now[:, None], book.good_history[:, :-1]], axis=1)
+
+    inter_with = book.interactions_with + participated
+    inter_total = book.interactions_total + jnp.sum(participated)
+
+    good_mask = jnp.where(jnp.isfinite(age_hist), good_hist, 0.0)
+    # empty slots contribute 0 via C(inf)=0
+    age_for_c = jnp.where(jnp.isfinite(age_hist), age_hist, 1e9)
+    b, d, u = subjective_opinion(good_mask, age_for_c, inter_with,
+                                 inter_total, params)
+    s_rep = subjective_reputation(b, u, params)
+    l_rep = local_reputation(o_rep, s_rep, params)
+
+    n_tasks = book.n_tasks + participated
+    r_new = update_reputation(book.reputation, l_rep, n_tasks, params)
+    r_new = jnp.clip(r_new, 0.0, 1.0)
+    reputation = jnp.where(participated > 0, r_new, book.reputation)
+
+    new_book = TrainerBook(
+        reputation=reputation,
+        n_tasks=n_tasks,
+        good_history=jnp.where(participated[:, None] > 0, good_hist,
+                               book.good_history),
+        age_history=jnp.where(participated[:, None] > 0, age_hist,
+                              book.age_history),
+        interactions_with=inter_with,
+        interactions_total=inter_total,
+    )
+    diag = {"o_rep": o_rep, "s_rep": s_rep, "l_rep": l_rep, "nd": nd,
+            "belief": b, "disbelief": d, "uncertainty": u}
+    return new_book, diag
+
+
+def init_book(n: int, history: int = 16,
+              params: ReputationParams = ReputationParams()) -> TrainerBook:
+    return TrainerBook(
+        reputation=jnp.full((n,), params.r_init, jnp.float32),
+        n_tasks=jnp.zeros((n,), jnp.float32),
+        good_history=jnp.zeros((n, history), jnp.float32),
+        age_history=jnp.full((n, history), jnp.inf, jnp.float32),
+        interactions_with=jnp.zeros((n,), jnp.float32),
+        interactions_total=jnp.zeros((), jnp.float32),
+    )
+
+
+jax.tree_util.register_pytree_node(
+    TrainerBook,
+    lambda b: ((b.reputation, b.n_tasks, b.good_history, b.age_history,
+                b.interactions_with, b.interactions_total), None),
+    lambda _, xs: TrainerBook(*xs),
+)

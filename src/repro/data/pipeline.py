@@ -1,0 +1,73 @@
+"""Sharded input pipeline: host-side prefetch + device placement.
+
+At pod scale each host feeds only its mesh addressable slice; here the same
+code path runs with the degenerate single-host mesh.  Deterministic seeding
+per (client, round) makes FL rounds reproducible across restarts — required
+for the checkpoint/restart fault-tolerance contract.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Background-thread prefetch of host batches onto device."""
+
+    def __init__(self, it: Iterator, depth: int = 2, sharding=None):
+        self._it = it
+        self._sharding = sharding
+        self._q: collections.deque = collections.deque()
+        self._depth = depth
+        self._lock = threading.Lock()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._stop = False
+        self._sem = threading.Semaphore(0)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for batch in self._it:
+                if self._stop:
+                    return
+                if self._sharding is not None:
+                    batch = jax.device_put(batch, self._sharding)
+                else:
+                    batch = jax.device_put(batch)
+                while len(self._q) >= self._depth and not self._stop:
+                    threading.Event().wait(0.002)
+                with self._lock:
+                    self._q.append(batch)
+                self._sem.release()
+        except BaseException as e:  # noqa: BLE001 — surfaced on next()
+            self._err = e
+            self._sem.release()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        self._sem.acquire()
+        if self._err is not None:
+            raise self._err
+        with self._lock:
+            return self._q.popleft()
+
+    def close(self):
+        self._stop = True
+
+
+def client_batch_fn(xs: np.ndarray, ys: np.ndarray, parts,
+                    batch_size: int) -> Callable[[int, int], Dict]:
+    """Deterministic (client, round) -> batch selector over a partition."""
+    def get(client: int, rnd: int) -> Dict[str, np.ndarray]:
+        idx = parts[client]
+        rng = np.random.default_rng(hash((client, rnd)) % (2 ** 32))
+        pick = rng.choice(idx, size=min(batch_size, len(idx)), replace=False)
+        return {"images": xs[pick], "labels": ys[pick]}
+    return get

@@ -1,0 +1,81 @@
+"""FL training agent (TA): local training + DP + submission via IPFS/ledger.
+
+This is the host-orchestration face used by the paper-faithful LeNet-5/MNIST
+example; the pod-scale face is the jitted fl/round.py.  Behaviour profiles
+(good / malicious / lazy) implement the paper's §VI-C experiment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.storage import BlobStore
+from repro.fl.dp import DPConfig, privatize
+
+
+@dataclasses.dataclass
+class ClientConfig:
+    client_id: str
+    behavior: str = "good"            # good | malicious | lazy
+    lazy_skip_range: tuple = (0.4, 0.6)  # fraction of rounds skipped
+    local_steps: int = 4
+    dp: DPConfig = dataclasses.field(default_factory=DPConfig)
+
+
+class TrainingAgent:
+    def __init__(self, cfg: ClientConfig, model, opt, store: BlobStore,
+                 batch_fn: Callable[[int, int], Dict], seed: int = 0):
+        self.cfg = cfg
+        self.model = model
+        self.opt = opt
+        self.store = store
+        self.batch_fn = batch_fn
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.key(seed)
+
+        def local_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: self.model.loss(p, batch))(params)
+            params, opt_state, gn = self.opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+        self._local_step = jax.jit(local_step)
+
+    def participate(self, rnd: int) -> bool:
+        if self.cfg.behavior == "lazy":
+            lo, hi = self.cfg.lazy_skip_range
+            return self.rng.random() > self.rng.uniform(lo, hi)
+        return True
+
+    def train_round(self, global_params, opt_state, client_idx: int,
+                    rnd: int) -> Optional[Dict]:
+        """One FL round: returns {cid, params, opt_state} or None if skipped."""
+        if not self.participate(rnd):
+            return None
+        if self.cfg.behavior == "malicious":
+            # free-riding: arbitrary weights, no actual training
+            self.key, k = jax.random.split(self.key)
+            fake = jax.tree.map(
+                lambda p: jax.random.normal(k, p.shape, jnp.float32)
+                .astype(p.dtype) * 0.1, global_params)
+            cid = self.store.put(jax.tree.map(np.asarray, fake))
+            return {"cid": cid, "params": fake, "opt_state": opt_state}
+
+        params = global_params
+        loss = None
+        for s in range(self.cfg.local_steps):
+            batch = self.batch_fn(client_idx, rnd * 1000 + s)
+            params, opt_state, loss = self._local_step(params, opt_state,
+                                                       batch)
+        # differential privacy on the submitted update (w' = w + n)
+        self.key, k = jax.random.split(self.key)
+        update = jax.tree.map(lambda a, b: a - b, params, global_params)
+        noised_update, _ = privatize(k, update, self.cfg.dp)
+        submitted = jax.tree.map(lambda g, u: g + u, global_params,
+                                 noised_update)
+        cid = self.store.put(jax.tree.map(np.asarray, submitted))
+        return {"cid": cid, "params": submitted, "opt_state": opt_state,
+                "loss": None if loss is None else float(loss)}

@@ -1,0 +1,46 @@
+"""Differential privacy for submitted model weights (paper §III-D.3):
+w' = w + n, Gaussian mechanism with per-leaf calibrated sigma."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    enabled: bool = True
+    clip_norm: float = 1.0        # L2 sensitivity bound on the update
+    noise_multiplier: float = 0.6  # sigma = multiplier * clip / sqrt(batch)
+    batch_size: int = 32
+
+
+def clip_update(update_tree, clip_norm: float):
+    """Clip the whole update pytree to L2 norm <= clip_norm."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(update_tree))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+        update_tree), norm
+
+
+def add_noise(key, update_tree, cfg: DPConfig):
+    """Gaussian mechanism on the (clipped) update."""
+    if not cfg.enabled:
+        return update_tree
+    sigma = cfg.noise_multiplier * cfg.clip_norm / max(cfg.batch_size, 1) ** 0.5
+    leaves, treedef = jax.tree.flatten(update_tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        (l.astype(jnp.float32)
+         + sigma * jax.random.normal(k, l.shape, jnp.float32)).astype(l.dtype)
+        for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def privatize(key, update_tree, cfg: DPConfig = DPConfig()):
+    clipped, norm = clip_update(update_tree, cfg.clip_norm)
+    return add_noise(key, clipped, cfg), norm

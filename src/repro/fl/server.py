@@ -1,0 +1,168 @@
+"""Decentralized FL round orchestration: tasks + trainers + DON + reputation
++ escrow + rollup, wired together (the full paper workflow, steps 1-16 of
+Fig. 1).  No central server: the 'orchestrator' here is the protocol state
+machine every node can replay from the ledger."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_average_tree
+from repro.core.escrow import Escrow
+from repro.core.ledger import AccessControl, Chain, Tx
+from repro.core.oracle import DONConfig, evaluate_quorum
+from repro.core.reputation import (ReputationParams, TrainerBook,
+                                   end_of_task_update, init_book)
+from repro.core.rollup import Rollup
+from repro.core.storage import BlobStore
+from repro.core.tasks import TaskContract
+from repro.core.gas import DEFAULT_GAS
+
+
+@dataclasses.dataclass
+class FLTaskResult:
+    global_params: object
+    scores: np.ndarray
+    reputations: np.ndarray
+    payouts: Dict[str, float]
+    diagnostics: List[Dict]
+
+
+class AutoDFL:
+    """End-to-end protocol harness (the PoC the paper evaluates)."""
+
+    def __init__(self, model, opt, n_trainers: int,
+                 eval_fn: Callable, val_batch,
+                 rep_params: ReputationParams = ReputationParams(),
+                 don: DONConfig = DONConfig(), use_rollup: bool = True,
+                 use_pallas_agg: bool = False, seed: int = 0):
+        self.model = model
+        self.opt = opt
+        self.eval_fn = eval_fn
+        self.val_batch = val_batch
+        self.rep_params = rep_params
+        self.don = don
+        self.use_rollup = use_rollup
+        self.use_pallas_agg = use_pallas_agg
+
+        self.store = BlobStore()
+        self.acl = AccessControl(["admin0", "admin1", "admin2"])
+        self.escrow = Escrow()
+        self.tsc = TaskContract(self.acl, self.escrow, self.store)
+        self.chain = Chain()
+        self.rollup = Rollup(self.chain) if use_rollup else None
+        self.book: TrainerBook = init_book(n_trainers)
+        self.trainer_ids = [f"trainer{i}" for i in range(n_trainers)]
+        for t in self.trainer_ids:
+            self.acl.grant("admin0", t, "trainer")
+            self.escrow.fund(t, 10.0)
+        self.acl.grant("admin0", "tp0", "task_publisher")
+        self.escrow.fund("tp0", 1000.0)
+        self._clock = 0.0
+
+    # -- ledger helpers -----------------------------------------------------------
+    def _tx(self, fn: str, sender: str, payload: Dict):
+        self._clock += 0.01
+        gas = DEFAULT_GAS.l1_per_call.get(fn, 30000)
+        tx = Tx(fn, sender, payload, gas, self._clock)
+        if self.rollup is not None:
+            self.rollup.submit(tx)
+        else:
+            self.chain.submit(tx)
+
+    # -- one full task (steps 1-16 of Fig. 1) -------------------------------------
+    def run_task(self, task_id: str, agents, batch_fn, rounds: int = 5,
+                 reward: float = 10.0, n_select: Optional[int] = None
+                 ) -> FLTaskResult:
+        n = len(agents)
+        model_cid = self.store.put({"arch": self.model.cfg.name})
+        # 1-2: publish (escrow locks the reward)
+        self.tsc.publish_task("tp0", task_id, model_cid, model_cid,
+                              rounds, 0.5, reward)
+        self._tx("publishTask", "tp0", {"taskId": task_id})
+        # select trainers by reputation
+        reps = {t: float(r) for t, r in
+                zip(self.trainer_ids, np.asarray(self.book.reputation))}
+        selected = self.tsc.select_trainers(task_id, reps, n_select or n)
+        sel_idx = [self.trainer_ids.index(t) for t in selected]
+        for t in selected:
+            self.escrow.lock_collateral(t, task_id, 1.0)
+
+        params = self.model.init_params(jax.random.key(0))
+        opt_states = {i: self.opt.init(params) for i in sel_idx}
+        completed = np.zeros(n)
+        diagnostics = []
+
+        last_submissions: Dict[int, object] = {}
+        for rnd in range(rounds):
+            # 3-6: local training + submit
+            submissions = {}
+            for i in sel_idx:
+                agent = agents[i]
+                out = agent.train_round(params, opt_states[i], i, rnd)
+                if out is None:
+                    continue
+                completed[i] += 1
+                opt_states[i] = out["opt_state"]
+                submissions[i] = out["params"]
+                self.tsc.submit_local_model(self.trainer_ids[i], task_id,
+                                            rnd, out["cid"])
+                self._tx("submitLocalModel", self.trainer_ids[i],
+                         {"taskId": task_id, "round": rnd, "cid": out["cid"]})
+            if not submissions:
+                self.tsc.advance_round(task_id)
+                continue
+            last_submissions = submissions
+            # 7-10: DON evaluation
+            idxs = sorted(submissions)
+            scores, report = evaluate_quorum(
+                self.eval_fn, [submissions[i] for i in idxs],
+                self.val_batch, self.don)
+            for i in idxs:
+                self._tx("calculateObjectiveRep", self.trainer_ids[i],
+                         {"value": float(scores[idxs.index(i)])})
+            # 11-15: reputation-weighted aggregation (Eq. 1)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[submissions[i] for i in idxs])
+            params = weighted_average_tree(stacked, scores,
+                                           self.use_pallas_agg)
+            self.tsc.advance_round(task_id)
+
+        # 16: end-of-task reputation refresh (Eq. 2-10)
+        from repro.core.aggregation import tree_flat
+        g_flat = tree_flat(params)
+        dists = np.zeros(n, np.float32)
+        score_auto = np.zeros(n, np.float32)
+        participated = np.zeros(n, np.float32)
+        for i in sel_idx:
+            participated[i] = 1.0
+            if i in last_submissions:
+                l_flat = tree_flat(last_submissions[i])
+                dists[i] = float(jnp.linalg.norm(l_flat - g_flat))
+                score_auto[i] = float(self.eval_fn(last_submissions[i],
+                                                   self.val_batch))
+            else:
+                dists[i] = float(np.max(dists)) if dists.any() else 1.0
+        self.book, diag = end_of_task_update(
+            self.book, jnp.asarray(score_auto), jnp.asarray(completed),
+            jnp.full(n, float(rounds)), jnp.asarray(dists),
+            jnp.asarray(participated), self.rep_params)
+        for i in sel_idx:
+            self._tx("calculateSubjectiveRep", self.trainer_ids[i],
+                     {"value": float(diag["s_rep"][i])})
+        diagnostics.append(jax.tree.map(np.asarray, diag))
+
+        # settle: score-proportional rewards; zero-score slashed
+        self.tsc.record_scores(task_id, {
+            self.trainer_ids[i]: float(score_auto[i]) for i in sel_idx})
+        payouts = self.tsc.close_task(task_id)
+        if self.rollup is not None:
+            self.rollup.flush()
+        self.chain.run_until(self._clock + 5.0)
+        return FLTaskResult(params, score_auto,
+                            np.asarray(self.book.reputation), payouts,
+                            diagnostics)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+The model-compute hot-spot for the prefill_32k cells: scores never leave
+VMEM (the XLA blocked path materialises them in HBM — see EXPERIMENTS.md
+§Perf for the measured delta).
+
+Grid: (B*H, n_q_blocks, n_kv_blocks), kv innermost ("arbitrary" semantics so
+the accumulator scratch carries across kv steps).  Causality is handled by
+skipping fully-masked kv blocks via pl.when and edge-masking the diagonal
+block.  GQA: kv head index = q head // (H // Hkv) via the BlockSpec index
+map — no repeat materialisation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, block_q, block_k, causal):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """q: (B, S, H, dh); k, v: (B, S, Hkv, dh) -> (B, S, H, dh)."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    n_rep = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+
+    # (B, S, H, dh) -> (B*H, S, dh) layout for a flat batch-head grid
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, S, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, S, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, S, dh)
+
+    def kv_index(bh, qi, ki):
+        return (bh // n_rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=dh ** -0.5, block_q=block_q,
+                          block_k=block_k, causal=causal),
+        grid=(B * H, S // block_q, S // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, H, S, dh), 1, 2)

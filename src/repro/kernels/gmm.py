@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: expert-grouped matmul (MoE hot-spot).
+
+Operates on the capacity-dispatched layout (E, C, d) x (E, d, f) -> (E, C, f)
+— the megablox idea adapted to the framework's dispatch path: each grid step
+multiplies one expert's token tile against that expert's weight tile, with
+the expert index driving the weight BlockSpec index map (weights stream
+through VMEM once per expert, not per token tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)      # (bc, d)
+    w = w_ref[0].astype(jnp.float32)      # (d, bf)
+    o_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "interpret"))
+def gmm(xe: jnp.ndarray, w: jnp.ndarray, block_c: int = 128,
+        block_f: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """xe: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    E, C, d = xe.shape
+    _, _, f = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    pad_c = (-C) % block_c
+    pad_f = (-f) % block_f
+    if pad_c:
+        xe = jnp.pad(xe, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_f)))
+    Cp, fp = C + pad_c, f + pad_f
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(E, Cp // block_c, fp // block_f),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, ci, fi: (e, ci, 0)),
+            pl.BlockSpec((1, d, block_f), lambda e, ci, fi: (e, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, fp), xe.dtype),
+        interpret=interpret,
+    )(xe, w)
+    return out[:, :C, :f]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: rollup validity digest (chunked XOR-mix fold).
+
+The 'prove' stand-in of the rollup commit (see core/rollup.py): a
+deterministic integrity digest over the merged update buffer, computed
+in-line with aggregation so the commit adds no extra HBM pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)   # seed applied in the wrapper
+
+    x = x_ref[...]
+    mixed = jnp.bitwise_xor(x, x >> 16) * jnp.uint32(0x85EBCA6B)
+    # lane-wise fold, then fold the running lane vector into the out block
+    o_ref[...] = jnp.bitwise_xor(
+        o_ref[...],
+        jax.lax.reduce(mixed, jnp.uint32(0), jnp.bitwise_xor, (0,))[None])
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def rollup_digest(buf: jnp.ndarray, block_p: int = 16384,
+                  interpret: bool = False) -> jnp.ndarray:
+    """buf: (P,) float32/uint32 buffer -> scalar u32 digest."""
+    if buf.dtype != jnp.uint32:
+        buf = jax.lax.bitcast_convert_type(buf.astype(jnp.float32), jnp.uint32)
+    P = buf.shape[0]
+    pad = (-P) % block_p
+    if pad:
+        buf = jnp.pad(buf, (0, pad))
+    Pp = P + pad
+    lanes = 128
+    rows = Pp // lanes
+    buf2 = buf.reshape(rows, lanes)
+    block_r = max(1, min(rows, block_p // lanes))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(max(1, rows // block_r),),
+        in_specs=[pl.BlockSpec((block_r, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, lanes), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, lanes), jnp.uint32),
+        interpret=interpret,
+    )(buf2)
+    # final lane fold on host-side jnp (tiny); seed applied here so the
+    # lane-broadcast in the kernel cannot cancel it (even lane count)
+    return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
+        out[0], jnp.uint32(0), jnp.bitwise_xor, (0,))

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused sLSTM time scan (the xLSTM sequential hot-spot).
+
+The XLA while-loop pays fixed loop-carry costs every timestep (measured in
+EXPERIMENTS.md §Perf cell B); this kernel keeps the recurrent state (h, c,
+n, m) AND the block-diagonal recurrent weights resident in VMEM scratch and
+streams wx/h through HBM exactly once:
+
+  grid = (S / block_t,)   "arbitrary" — state scratch carries across steps
+  per step: read one (B, block_t, 4d) wx tile, run block_t recurrent steps
+  in-register, write one (B, block_t, d) h tile.
+
+Analytic HBM traffic: (B*S*4d + B*S*d) * bytes + weights once — ~3.2 GB per
+xlstm-1.3b layer vs the ~1.5 TB/chip measured for the XLA loop path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(wx_ref, r_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+            y_ref, hN_ref, cN_ref, nN_ref, mN_ref,
+            h_s, c_s, n_s, m_s, *, block_t, nh, dh):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+        n_s[...] = n0_ref[...].astype(jnp.float32)
+        m_s[...] = m0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)              # (nh*dh, 4*dh)
+    d = nh * dh
+
+    def step(t, _):
+        h = h_s[...]                                # (B, d)
+        # recurrent matmul against the block-diag-expanded (d, 4d) weights
+        rec = jax.lax.dot_general(h, r, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        wx_t = wx_ref[:, t, :].astype(jnp.float32)  # (B, 4d)
+        gates = wx_t + rec
+        zi = gates[:, 0 * d:1 * d]
+        ii = gates[:, 1 * d:2 * d]
+        ff = gates[:, 2 * d:3 * d]
+        oo = gates[:, 3 * d:4 * d]
+        logf = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(logf + m_s[...], ii)
+        fw = jnp.exp(logf + m_s[...] - m_new)
+        iw = jnp.exp(ii - m_new)
+        c_new = fw * c_s[...] + iw * jnp.tanh(zi)
+        n_new = fw * n_s[...] + iw
+        h_new = jax.nn.sigmoid(oo) * c_new / jnp.maximum(n_new, 1e-6)
+        h_s[...], c_s[...], n_s[...], m_s[...] = h_new, c_new, n_new, m_new
+        y_ref[:, t, :] = h_new.astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, block_t, step, ())
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _final():
+        hN_ref[...] = h_s[...]
+        cN_ref[...] = c_s[...]
+        nN_ref[...] = n_s[...]
+        mN_ref[...] = m_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("nh", "block_t", "interpret"))
+def slstm_scan(wx, r_expanded, h0, c0, n0, m0, nh: int, block_t: int = 64,
+               interpret: bool = False):
+    """wx: (B, S, 4d); r_expanded: (d, 4d) block-diag-expanded recurrent
+    weights; state h0/c0/n0/m0: (B, d) f32.  Returns (y (B,S,d) f32,
+    (hN, cN, nN, mN))."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    dh = d // nh
+    block_t = min(block_t, S)
+    assert S % block_t == 0
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, S, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+    )
+    grid = (S // block_t,)
+    state_spec = pl.BlockSpec((B, d), lambda i: (0, 0))
+    y, hN, cN, nN, mN = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t, nh=nh, dh=dh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, block_t, d4), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, d4), lambda i: (0, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_specs=(
+            pl.BlockSpec((B, block_t, d), lambda i: (0, i, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((B, d), jnp.float32) for _ in range(4)],
+        interpret=interpret,
+    )(wx, r_expanded, h0, c0, n0, m0)
+    return y, (hN, cN, nN, mN)
+
+
+def expand_block_diag(r_gates):
+    """(nh, dh, 4dh) block-diagonal weights -> dense (d, 4d) with the same
+    action: rec[b] = h[b] @ R_expanded  ==  per-head h @ r."""
+    nh, dh, dh4 = r_gates.shape
+    d = nh * dh
+    out = jnp.zeros((d, 4 * d), r_gates.dtype)
+    for h in range(nh):
+        for g in range(4):
+            out = out.at[h * dh:(h + 1) * dh,
+                         g * d + h * dh: g * d + (h + 1) * dh].set(
+                r_gates[h, :, g * dh:(g + 1) * dh])
+    return out

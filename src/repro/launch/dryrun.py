@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   512 placeholder host devices let jax.make_mesh build the production mesh.
+#   Never set this outside the dry-run (smoke tests / benches see 1 device).
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(*args)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())    # proves it fits
+    print(compiled.cost_analysis())      # XLA's own numbers (scan-undercounted)
+plus the loop-aware HLO walk (analysis/hlo_cost.py) that produces the honest
+FLOP / byte / collective-byte roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo_cost import analyze
+from repro.analysis.model_flops import model_flops
+from repro.configs.base import SHAPES, cell_is_skipped
+from repro.configs.registry import ASSIGNED, get_config, get_shape
+from repro.launch.mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.steps import build_cell
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    skip = cell_is_skipped(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = cell.jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        walk = analyze(compiled.as_text())
+        mf = model_flops(cfg, shape, cell.model.params_shape())
+
+        # Roofline terms (seconds, per chip; walker numbers are per-device)
+        t_compute = walk.flops / PEAK_FLOPS_BF16
+        t_memory = walk.bytes / HBM_BW
+        t_collective = walk.collective_bytes / ICI_BW
+        terms = {"compute_s": t_compute, "memory_s": t_memory,
+                 "collective_s": t_collective}
+        dominant = max(terms, key=terms.get)
+
+        mem = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+        }
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem,
+            fits_hbm=mem["peak_bytes_est"] <= HBM_BYTES,
+            xla_cost={k: ca.get(k) for k in ("flops", "bytes accessed",
+                                             "transcendentals")},
+            walk={
+                "flops": walk.flops,
+                "bytes": walk.bytes,
+                "collective_bytes": walk.collective_bytes,
+                "collective_wire_bytes": walk.collective_wire_bytes,
+                "collectives": walk.collectives,
+                "collective_counts": walk.collective_counts,
+                "custom_calls": len(walk.custom_calls),
+                "warnings": walk.warnings[:5],
+            },
+            roofline={
+                **terms,
+                "dominant": dominant,
+                "step_time_lb_s": max(terms.values()),
+                "model_flops_global": mf["model_flops_total"],
+                "model_flops_per_chip": mf["model_flops_total"] / n_chips,
+                "useful_flops_ratio": (mf["model_flops_total"] / n_chips)
+                / max(walk.flops, 1.0),
+                "roofline_fraction": min(
+                    1.0, (mf["model_flops_total"] / n_chips / PEAK_FLOPS_BF16)
+                    / max(max(terms.values()), 1e-30)),
+            },
+        )
+        if verbose:
+            print(f"== {arch} x {shape_name} x {mesh_kind} "
+                  f"({cell.kind}, {n_chips} chips) ==")
+            print(f"memory_analysis: {ma}")
+            print(f"cost_analysis: flops={ca.get('flops')} "
+                  f"bytes={ca.get('bytes accessed')}")
+            print(f"walk: flops/chip={walk.flops:.3e} bytes/chip={walk.bytes:.3e} "
+                  f"coll/chip={walk.collective_bytes:.3e} {dict(walk.collective_counts)}")
+            print(f"roofline: compute={t_compute*1e3:.2f}ms "
+                  f"memory={t_memory*1e3:.2f}ms coll={t_collective*1e3:.2f}ms "
+                  f"dominant={dominant} "
+                  f"frac={rec['roofline']['roofline_fraction']:.3f} "
+                  f"peak_mem={mem['peak_bytes_est']/2**30:.2f}GiB "
+                  f"fits={rec['fits_hbm']}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"== {arch} x {shape_name} x {mesh_kind} FAILED ==")
+            print(rec["error"])
+    return rec
+
+
+def run_fl_round_cell(arch: str, mesh_kind: str, h_local_steps: int = 8,
+                      seq_len: int = 4096, verbose: bool = True):
+    """Dry-run the paper-technique cell: the rollup round (fl/round.py)."""
+    from repro.fl.round import FLRoundSpec, build_fl_round_cell
+    from repro.models.model import build_model
+    from repro.optim.optimizers import make_optimizer, spec_for_config
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    n_trainers = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    rec = {"arch": arch, "shape": f"fl_round_h{h_local_steps}",
+           "mesh": mesh_kind}
+    t0 = time.time()
+    try:
+        model = build_model(cfg, mesh)
+        opt = make_optimizer(spec_for_config(cfg))
+        spec = FLRoundSpec(n_trainers=n_trainers,
+                           h_local_steps=h_local_steps)
+        jitted, cell_args = build_fl_round_cell(model, opt, spec, mesh,
+                                                seq_len)
+        with mesh:
+            lowered = jitted.lower(*cell_args)
+            compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        walk = analyze(compiled.as_text())
+        mf = model_flops(cfg, get_shape("train_4k"))
+        terms = {"compute_s": walk.flops / PEAK_FLOPS_BF16,
+                 "memory_s": walk.bytes / HBM_BW,
+                 "collective_s": walk.collective_bytes / ICI_BW}
+        rec.update(
+            status="ok", kind="fl_round", n_chips=n_chips,
+            h_local_steps=h_local_steps, n_trainers=n_trainers,
+            compile_s=round(time.time() - t0, 2),
+            memory={"argument_bytes": ma.argument_size_in_bytes,
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "peak_bytes_est": ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes},
+            walk={"flops": walk.flops, "bytes": walk.bytes,
+                  "collective_bytes": walk.collective_bytes,
+                  "collectives": walk.collectives,
+                  "collective_counts": walk.collective_counts},
+            roofline={**terms,
+                      "dominant": max(terms, key=terms.get),
+                      "collective_s_per_local_step":
+                          terms["collective_s"] / h_local_steps,
+                      "model_flops_global":
+                          mf["model_flops_total"] * h_local_steps},
+        )
+        if verbose:
+            print(f"== fl_round {arch} H={h_local_steps} x {mesh_kind} ==")
+            print(f"memory_analysis: {ma}")
+            print(f"walk: flops/chip={walk.flops:.3e} "
+                  f"bytes/chip={walk.bytes:.3e} "
+                  f"coll/chip={walk.collective_bytes:.3e} "
+                  f"{dict(walk.collective_counts)}")
+            print(f"roofline: compute={terms['compute_s']*1e3:.2f}ms "
+                  f"memory={terms['memory_s']*1e3:.2f}ms "
+                  f"coll={terms['collective_s']*1e3:.2f}ms "
+                  f"coll/localstep={terms['collective_s']/h_local_steps*1e3:.2f}ms")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"== fl_round {arch} FAILED ==\n{rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fl-round", action="store_true",
+                    help="dry-run the paper-technique rollup-round cell")
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.fl_round:
+        os.makedirs(args.out, exist_ok=True)
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        fail = 0
+        for mk in meshes:
+            rec = run_fl_round_cell(args.arch or "yi-6b", mk,
+                                    args.local_steps)
+            fn = os.path.join(
+                args.out,
+                f"fl_round__{args.arch or 'yi-6b'}__h{args.local_steps}__{mk}.json")
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+            fail += rec["status"] != "ok"
+        raise SystemExit(1 if fail else 0)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk)
+            fn = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+            n_ok += rec["status"] == "ok"
+            n_fail += rec["status"] == "error"
+            n_skip += rec["status"] == "skipped"
+    print(f"\ndry-run summary: ok={n_ok} failed={n_fail} skipped={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Build lowerable, fully-sharded step functions for every dry-run cell.
+
+A *cell* = (architecture x input shape x mesh).  This module returns the jit
+object + ShapeDtypeStruct args so the dry-run can ``.lower().compile()``
+without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+from repro.optim.optimizers import (OptimizerSpec, make_optimizer,
+                                    spec_for_config)
+from repro.sharding.specs import state_pspec_tree
+
+
+class Cell(NamedTuple):
+    jitted: Any
+    args: tuple
+    model: Model
+    kind: str
+
+
+def _shardify(mesh, pspec_tree, shape_tree=None):
+    if mesh is None:
+        return None
+    if shape_tree is not None:
+        from repro.sharding.specs import sanitize_pspec_tree
+        pspec_tree = sanitize_pspec_tree(mesh, pspec_tree, shape_tree)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_pspecs(opt_name: str, pspecs, params_shape):
+    """Optimizer-state PartitionSpecs mirroring the param specs."""
+    if opt_name in ("adamw", "sgdm"):
+        st = {"m": pspecs, "step": P()}
+        if opt_name == "adamw":
+            st["v"] = pspecs
+        return st
+    if opt_name == "adafactor":
+        def leaf(spec, shape_leaf):
+            shape = shape_leaf.shape
+            from repro.optim.optimizers import _factored
+            if _factored(shape, OptimizerSpec().factored_min):
+                return {"vr": P(*spec[:-1]), "vc": P(*(spec[:-2] + spec[-1:]))}
+            return {"v": spec}
+        v = jax.tree.map(leaf, pspecs, params_shape,
+                         is_leaf=lambda x: isinstance(x, P))
+        return {"v": v, "step": P()}
+    raise ValueError(opt_name)
+
+
+def build_train_step(model: Model, opt):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch))(params)
+        new_params, new_opt_state, gn = opt.update(grads, opt_state, params)
+        return new_params, new_opt_state, {"loss": loss, "grad_norm": gn}
+    return train_step
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Cell:
+    model = build_model(cfg, mesh)
+    pshape = model.params_shape()
+    pspecs = model.params_pspecs(pshape)
+    p_shard = _shardify(mesh, pspecs, pshape)
+    batch_struct = model.input_specs(shape)
+    b_shard = _shardify(mesh, model.input_pspecs(shape), batch_struct)
+
+    if shape.kind == "train":
+        opt = make_optimizer(spec_for_config(cfg))
+        oshape = jax.eval_shape(opt.init, pshape)
+        ospecs = opt_state_pspecs(cfg.optimizer, pspecs, pshape)
+        o_shard = _shardify(mesh, ospecs, oshape)
+        step = build_train_step(model, opt)
+        metrics_shard = (_shardify(mesh, {"loss": P(), "grad_norm": P()})
+                         if mesh is not None else None)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard) if mesh else None,
+            out_shardings=(p_shard, o_shard, metrics_shard) if mesh else None,
+            donate_argnums=(0, 1))
+        args = (pshape, oshape, batch_struct)
+        return Cell(jitted, args, model, "train")
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return model.prefill(params, batch)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard) if mesh else None)
+        return Cell(jitted, (pshape, batch_struct), model, "prefill")
+
+    # decode: one token against a seq_len-deep cache
+    sshape = model.decode_state_shape(shape.global_batch, shape.seq_len)
+    sspecs = model.decode_state_pspecs(shape.global_batch, shape.seq_len)
+    s_shard = _shardify(mesh, sspecs, sshape)
+
+    def step(params, state, batch):
+        return model.decode(params, state, batch)
+
+    if mesh is not None:
+        from repro.sharding.specs import sanitize_spec
+        logits_spec = sanitize_spec(
+            mesh, P((model.ctx.dp_axes or None), model.ctx.tp_axis),
+            (shape.global_batch, cfg.vocab_size))
+        out_sh = (NamedSharding(mesh, logits_spec), s_shard)
+    else:
+        out_sh = None
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, s_shard, b_shard) if mesh else None,
+        out_shardings=out_sh,
+        donate_argnums=(1,))
+    # fill pos with a concrete struct
+    return Cell(jitted, (pshape, sshape, batch_struct), model, "decode")

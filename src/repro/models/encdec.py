@@ -1,0 +1,169 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, enc_seq, d).  Learned absolute positions on both sides.
+Decoder blocks = self-attn + cross-attn + dense FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import apply_norm, dense_init, layer_norm
+from repro.models.transformer import _maybe_remat
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+
+    def enc_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "attn": attn.init_attn_params(k1, cfg, dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "wi_gate": dense_init(k2, (d, cfg.d_ff), dtype),
+            "wi_up": dense_init(k2, (d, cfg.d_ff), dtype),
+            "w_down": dense_init(k3, (cfg.d_ff, d), dtype),
+        }
+
+    def dec_block(k):
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "attn": attn.init_attn_params(k1, cfg, dtype),
+            "ln_x": jnp.ones((d,), dtype),
+            "xattn": attn.init_attn_params(k2, cfg, dtype, cross=True),
+            "ln2": jnp.ones((d,), dtype),
+            "wi_gate": dense_init(k3, (d, cfg.d_ff), dtype),
+            "wi_up": dense_init(k3, (d, cfg.d_ff), dtype),
+            "w_down": dense_init(k4, (cfg.d_ff, d), dtype),
+        }
+
+    def stack(fn, n, base_key):
+        blocks = [fn(jax.random.split(base_key, n)[i]) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return {
+        "enc_pos": dense_init(ks[0], (cfg.enc_seq, d), dtype),
+        "enc_periods": {"b0": stack(enc_block, cfg.n_enc_layers, ks[1])},
+        "enc_final_norm": jnp.ones((d,), dtype),
+        "dec_pos": dense_init(ks[2], (32_768, d), dtype),
+        "embed": {"table": dense_init(ks[3], (cfg.vocab_size, d), dtype)},
+        "periods": {"b0": stack(dec_block, cfg.n_layers, ks[4])},
+        "final_norm": jnp.ones((d,), dtype),
+        "head_w": dense_init(ks[5], (d, cfg.vocab_size), dtype),
+    }
+
+
+def init_params_shape(cfg, dtype=None):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+def encode(cfg, params, audio_embeds, ctx=None):
+    x = audio_embeds + params["enc_pos"][None]
+    if ctx:
+        x = ctx.act_btd(x)
+
+    def body(x, bp):
+        h = apply_norm(cfg, x, bp["ln"])
+        x = x + attn.bidir_attention_block(cfg, bp["attn"], h, ctx)
+        h = apply_norm(cfg, x, bp["ln2"])
+        f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, bp["wi_gate"]))
+        x = x + jnp.einsum("bsf,fd->bsd", f, bp["w_down"])
+        if ctx:
+            x = ctx.act_btd(x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_periods"]["b0"])
+    return apply_norm(cfg, x, params["enc_final_norm"])
+
+
+def _dec_block(cfg, bp, x, positions, enc_out, ctx, return_cache=False):
+    h = apply_norm(cfg, x, bp["ln"])
+    if return_cache:
+        delta, (k, v) = attn.attention_block(cfg, bp["attn"], h, positions, ctx,
+                                             return_cache=True)
+    else:
+        delta = attn.attention_block(cfg, bp["attn"], h, positions, ctx)
+        k = v = None
+    x = x + delta
+    h = apply_norm(cfg, x, bp["ln_x"])
+    ek, ev = attn.encode_cross_kv(cfg, bp["xattn"], enc_out)
+    x = x + attn.cross_attention_block(cfg, bp["xattn"], h, ek, ev, ctx)
+    h = apply_norm(cfg, x, bp["ln2"])
+    f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, bp["wi_gate"]))
+    x = x + jnp.einsum("bsf,fd->bsd", f, bp["w_down"])
+    if ctx:
+        x = ctx.act_btd(x)
+    return (x, (k, v, ek, ev)) if return_cache else x
+
+
+def forward(cfg, params, batch, ctx=None, remat=None):
+    """Training forward: audio embeds + decoder tokens -> logits."""
+    enc_out = encode(cfg, params, batch["audio_embeds"], ctx)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], 0, S, 0)[None]
+    if ctx:
+        x = ctx.act_btd(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, bp):
+        return _dec_block(cfg, bp, x, positions, enc_out, ctx), None
+
+    rb = _maybe_remat(body, remat if remat is not None else cfg.sharding.remat)
+    x, _ = jax.lax.scan(rb, x, params["periods"]["b0"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["head_w"])
+
+
+def loss_fn(cfg, params, batch, ctx=None, remat=None):
+    logits = forward(cfg, params, batch, ctx, remat).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def init_decode_state(cfg, batch, max_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, dh), dtype),
+        "ek": jnp.zeros((L, batch, cfg.enc_seq, Hkv, dh), dtype),
+        "ev": jnp.zeros((L, batch, cfg.enc_seq, Hkv, dh), dtype),
+    }
+
+
+def decode_step(cfg, params, state, batch, ctx=None):
+    """One-token decode against self-attn KV cache + cached cross KV."""
+    pos = batch["pos"]
+    x = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None]
+
+    def body(x, inp):
+        bp, st = inp
+        h = apply_norm(cfg, x, bp["ln"])
+        delta, ck, cv = attn.decode_attention_block(
+            cfg, bp["attn"], h, st["k"], st["v"], pos, ctx)
+        x = x + delta
+        h = apply_norm(cfg, x, bp["ln_x"])
+        x = x + attn.cross_attention_block(cfg, bp["xattn"], h,
+                                           st["ek"], st["ev"], ctx)
+        h = apply_norm(cfg, x, bp["ln2"])
+        f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, bp["wi_gate"]))
+        x = x + jnp.einsum("bsf,fd->bsd", f, bp["w_down"])
+        return x, {"k": ck, "v": cv, "ek": st["ek"], "ev": st["ev"]}
+
+    x, new_state = jax.lax.scan(body, x, (params["periods"]["b0"], state))
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head_w"])[:, 0]
+    return logits, new_state

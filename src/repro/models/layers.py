@@ -1,0 +1,102 @@
+"""Common layers: norms, MLP, rotary embeddings (RoPE + M-RoPE), initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, shape, dtype):
+    """Fan-in scaled init for (in, out)-style matrices (last-2 dims)."""
+    fan_in = shape[-2]
+    return truncated_normal_init(key, shape, fan_in ** -0.5, dtype)
+
+
+# -- norms --------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias=None, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(cfg, x, scale):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, scale)
+    return rms_norm(x, scale)
+
+
+# -- SwiGLU MLP -----------------------------------------------------------------
+def swiglu(x, wg, wu, wd, ctx=None):
+    h = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    h = jax.nn.silu(h) * u
+    if ctx is not None:
+        h = ctx.act_ffn(h)
+    return jnp.einsum("bsf,fd->bsd", h, wd)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(dh, theta))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections=(16, 24, 24)):
+    """M-RoPE (qwen2-vl): 3 position streams (temporal, height, width).
+
+    x: (B, S, H, dh); positions3: (3, B, S) int32.  ``sections`` are the
+    per-stream halves of dh/2 — scaled to the actual head_dim.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    base = sum(sections)
+    sec = [max(1, (s * half) // base) for s in sections]
+    sec[2] = half - sec[0] - sec[1]
+    inv = jnp.asarray(rope_freqs(dh, theta))  # (half,)
+    # choose which position stream drives each frequency band
+    stream = jnp.concatenate([jnp.full((sec[i],), i, jnp.int32) for i in range(3)])
+    # gather per band — pos_sel: (B, S, half)
+    pos_sel = positions3.astype(jnp.float32)[stream, :, :]  # (half, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                  # (B, S, half)
+    ang = pos_sel * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, batch, seq, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_variant == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos

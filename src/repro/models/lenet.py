@@ -1,0 +1,64 @@
+"""LeNet-5 — the paper's own FL workload (MNIST, §VI-B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return {
+        "conv1": {"w": dense_init(ks[0], (5, 5, 1, 6), dtype).reshape(5, 5, 1, 6),
+                  "b": jnp.zeros((6,), dtype)},
+        "conv2": {"w": dense_init(ks[1], (5, 5, 6, 16), dtype).reshape(5, 5, 6, 16),
+                  "b": jnp.zeros((16,), dtype)},
+        "fc1": {"w": dense_init(ks[2], (400, 120), dtype),
+                "b": jnp.zeros((120,), dtype)},
+        "fc2": {"w": dense_init(ks[3], (120, 84), dtype),
+                "b": jnp.zeros((84,), dtype)},
+        "fc3": {"w": dense_init(ks[4], (84, 10), dtype),
+                "b": jnp.zeros((10,), dtype)},
+    }
+
+
+def init_params_shape(cfg, dtype=jnp.float32):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.tanh(y + b)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID") / 4.0
+
+
+def forward(cfg, params, batch, ctx=None, remat=None):
+    """batch["images"]: (B, 32, 32, 1) -> logits (B, 10)."""
+    x = batch["images"]
+    x = _pool(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _pool(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.tanh(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def loss_fn(cfg, params, batch, ctx=None, remat=None):
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def accuracy(cfg, params, batch):
+    logits = forward(cfg, params, batch)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

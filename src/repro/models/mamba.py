@@ -1,0 +1,163 @@
+"""Mamba (selective SSM) block — Jamba's recurrent token mixer.
+
+Training path: chunked scan over the sequence (chunk-local associative scan,
+state carried across chunks) — memory stays O(chunk * di * ds) instead of
+O(S * di * ds).  Decode path: O(1) single-step state update — this is what
+makes the hybrid archs runnable at the 500k-context cell.
+
+TP: d_inner is sharded over the `model` axis (every SSM channel is
+independent), in_proj columns / out_proj rows sharded accordingly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def dt_rank(cfg) -> int:
+    return max(1, (cfg.d_model * cfg.mamba_expand) // 16)
+
+
+def init_mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = d * cfg.mamba_expand
+    ds = cfg.mamba_d_state
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialisation for A
+    a_init = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (di, cfg.mamba_d_conv), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_dt": dense_init(ks[2], (di, r), dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "x_B": dense_init(ks[4], (di, ds), dtype),
+        "x_C": dense_init(ks[5], (di, ds), dtype),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _ssm_chunk(h0, dA, dBx):
+    """Associative scan within a chunk.
+
+    h_t = dA_t * h_{t-1} + dBx_t;  h0: (B, di, ds); dA, dBx: (B, c, di, ds).
+    Returns (h_all (B, c, di, ds), h_last).
+    """
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+    aa, bb = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = aa * h0[:, None] + bb
+    return h_all, h_all[:, -1]
+
+
+def mamba_mix(cfg, p, xz, state=None, chunk=128):
+    """Core selective SSM on the already-projected stream.
+
+    xz: (B, S, di) post-conv activations; returns (y (B, S, di), last state).
+    """
+    B, S, di = xz.shape
+    ds = cfg.mamba_d_state
+    x32 = xz.astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        (x32 @ p["x_dt"].astype(jnp.float32)) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                      # (B,S,di)
+    Bmat = jnp.einsum("bsd,dn->bsn", x32, p["x_B"].astype(jnp.float32))
+    Cmat = jnp.einsum("bsd,dn->bsn", x32, p["x_C"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (di,ds)
+
+    if state is None:
+        state = jnp.zeros((B, di, ds), jnp.float32)
+
+    if S == 1:
+        dA1 = jnp.exp(dt[:, 0, :, None] * A[None])
+        dBx1 = (dt[:, 0] * x32[:, 0])[..., None] * Bmat[:, 0, None, :]
+        h = dA1 * state + dBx1
+        y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0])[:, None]
+        out = y + p["D"].astype(jnp.float32)[None, None] * x32
+        return out.astype(xz.dtype), h
+
+    if S % chunk != 0:
+        chunk = S
+    T = S // chunk
+
+    def reshape_c(a):
+        return jnp.moveaxis(a.reshape((B, T, chunk) + a.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def body(h, inp):
+        # build the (B, c, di, ds) transition tensors INSIDE the chunk:
+        # never materialise (B, S, di, ds)
+        dt_c, x_c, b_c, cm = inp
+        da = jnp.exp(dt_c[..., None] * A[None, None])            # (B,c,di,ds)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        h_all, h_last = _ssm_chunk(h, da, dbx)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cm)
+        return h_last, y
+
+    last, y_seq = jax.lax.scan(
+        body, state,
+        (reshape_c(dt), reshape_c(x32), reshape_c(Bmat), reshape_c(Cmat)))
+    y = jnp.moveaxis(y_seq, 0, 1).reshape(B, S, di)
+    out = y + p["D"].astype(jnp.float32)[None, None] * x32
+    return out.astype(xz.dtype), last
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv1d, kernel k.  x: (B, S, di).
+
+    conv_state: (B, k-1, di) trailing context for decode; returns (y, new_state).
+    """
+    k = p["conv_w"].shape[-1]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, S+k-1, di)
+    w = p["conv_w"].astype(jnp.float32)                   # (di, k)
+    y = sum(xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[:, i][None, None, :]
+            for i in range(k))
+    y = y + p["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def mamba_block(cfg, p, x, state=None, ctx=None):
+    """Full Mamba block.  x: (B, S, d) -> (B, S, d).
+
+    state: None (train) or {"conv": (B,k-1,di), "ssm": (B,di,ds)} (decode).
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    di = d * cfg.mamba_expand
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    if ctx is not None:
+        xs = ctx.constrain(xs, jax.sharding.PartitionSpec(
+            ctx.dp_axes or None, None, ctx.tp_axis))
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(p, xs, conv_state)
+    ssm_state = None if state is None else state["ssm"]
+    y, new_ssm = mamba_mix(cfg, p, xs, ssm_state)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": new_ssm}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch, dtype):
+    di = cfg.d_model * cfg.mamba_expand
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }

@@ -1,0 +1,142 @@
+"""Model facade: one uniform interface over all families.
+
+    model = build_model(cfg, mesh=None)
+    params = model.init_params(key)           # smoke tests
+    shapes = model.params_shape()             # dry-run (no allocation)
+    loss   = model.loss(params, batch)
+    logits, state = model.decode(params, state, batch)
+    batch  = model.input_specs(shape_cfg)     # ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lenet, transformer
+from repro.sharding.specs import (MeshCtx, params_pspec_tree,
+                                  state_pspec_tree)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.ctx = MeshCtx(mesh, cfg.sharding)
+        if cfg.family == "conv":
+            self._mod = lenet
+        elif cfg.enc_dec:
+            self._mod = encdec
+        else:
+            self._mod = transformer
+
+    # -- params ---------------------------------------------------------------
+    def init_params(self, key, dtype=None):
+        if self._mod is lenet:
+            return lenet.init_params(self.cfg, key)
+        return self._mod.init_params(self.cfg, key, dtype)
+
+    def params_shape(self):
+        return self._mod.init_params_shape(self.cfg)
+
+    def params_pspecs(self, params_shape=None):
+        ps = params_shape if params_shape is not None else self.params_shape()
+        return params_pspec_tree(self.ctx, ps)
+
+    # -- steps ----------------------------------------------------------------
+    def loss(self, params, batch, remat=None):
+        ctx = self.ctx if self.ctx.mesh is not None else None
+        return self._mod.loss_fn(self.cfg, params, batch, ctx, remat)
+
+    def forward(self, params, batch):
+        ctx = self.ctx if self.ctx.mesh is not None else None
+        return self._mod.forward(self.cfg, params, batch, ctx)
+
+    def prefill(self, params, batch):
+        ctx = self.ctx if self.ctx.mesh is not None else None
+        if self._mod is transformer:
+            return transformer.prefill(self.cfg, params, batch, ctx)
+        if self._mod is encdec:
+            # enc-dec prefill: encode + full decoder forward, last logits
+            logits = encdec.forward(self.cfg, params, batch, ctx, remat="none")
+            return logits[:, -1], None
+        raise NotImplementedError(self.cfg.family)
+
+    def decode(self, params, state, batch):
+        ctx = self.ctx if self.ctx.mesh is not None else None
+        return self._mod.decode_step(self.cfg, params, state, batch, ctx)
+
+    def init_decode_state(self, batch_size, max_len):
+        return self._mod.init_decode_state(self.cfg, batch_size, max_len)
+
+    def decode_state_shape(self, batch_size, max_len):
+        return jax.eval_shape(
+            lambda: self._mod.init_decode_state(self.cfg, batch_size, max_len))
+
+    def decode_state_pspecs(self, batch_size, max_len):
+        ss = self.decode_state_shape(batch_size, max_len)
+        return state_pspec_tree(self.ctx, ss)
+
+    # -- dry-run input stand-ins ------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct batch for one assigned shape (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+
+        if cfg.family == "conv":
+            return {"images": sds((B, 32, 32, 1), jnp.float32),
+                    "labels": sds((B,), i32)}
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.input_mode == "embeds":
+                batch = {"embeds": sds((B, S, cfg.d_model), bf16),
+                         "positions": sds((3, B, S), i32)}
+            elif cfg.input_mode == "audio":
+                batch = {"audio_embeds": sds((B, cfg.enc_seq, cfg.d_model), bf16),
+                         "tokens": sds((B, S), i32)}
+            else:
+                batch = {"tokens": sds((B, S), i32)}
+            if shape.kind == "train":
+                batch["labels"] = sds((B, S), i32)
+            return batch
+
+        # decode: one new token against a seq_len-deep cache/state
+        if cfg.input_mode == "embeds":
+            return {"embeds": sds((B, 1, cfg.d_model), bf16),
+                    "pos": sds((), i32)}
+        return {"tokens": sds((B, 1), i32), "pos": sds((), i32)}
+
+    def input_pspecs(self, shape: ShapeConfig):
+        """PartitionSpecs matching input_specs."""
+        ctx = self.ctx
+        dp = ctx.dp_axes or None
+        sp = ctx.sp_axis
+
+        def leaf_spec(name, leaf):
+            nd = len(leaf.shape)
+            if name == "positions":
+                return P(None, dp, sp)
+            if name == "pos":
+                return P()
+            if name == "embeds":
+                return P(dp, sp, None) if nd == 3 else P(dp, None)
+            if name == "audio_embeds":
+                return P(dp, None, None)
+            if name in ("tokens", "labels"):
+                return P(*([dp] + [None] * (nd - 1)))
+            if name == "images":
+                return P(dp, None, None, None)
+            return P(*([None] * nd))
+
+        specs = self.input_specs(shape)
+        return {k: leaf_spec(k, v) for k, v in specs.items()}
+
+
+def build_model(cfg: ModelConfig, mesh=None) -> Model:
+    return Model(cfg, mesh)

@@ -1,0 +1,318 @@
+"""Decoder-only LM assembly for all LM-family architectures.
+
+The stack is a lax.scan over ``n_periods`` repetitions of the config's block
+pattern (HLO size is independent of depth).  Each pattern position is a
+(mixer, ffn) pair:
+
+  mixer: attn | mamba | mlstm | slstm
+  ffn:   dense | moe | none           (xLSTM blocks carry their own FFN)
+
+Params live in ``params["periods"]["b{i}_*"]`` with a stacked leading
+period dim.  Decode state (KV cache / SSM state / LSTM state) mirrors that
+layout so the same scan drives both training and serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import apply_norm, dense_init, positions_for, swiglu
+
+
+# ---------------------------------------------------------------------------
+# Pattern specs
+# ---------------------------------------------------------------------------
+def block_specs(cfg):
+    """[(mixer, ffn_kind)] for one period."""
+    specs = []
+    for i, kind in enumerate(cfg.pattern):
+        if kind in (MLSTM, SLSTM):
+            specs.append((kind, "none"))
+            continue
+        ffn = "dense" if cfg.moe is None else (
+            "moe" if (cfg.moe.period == 1 or i % cfg.moe.period == cfg.moe.period - 1)
+            else "dense")
+        specs.append((kind, ffn))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (leading period dim handled by stacking)
+# ---------------------------------------------------------------------------
+def _init_ffn(key, cfg, kind, dtype):
+    if kind == "none":
+        return {}
+    if kind == "moe":
+        return {"ln2": jnp.ones((cfg.d_model,), dtype),
+                **moe_mod.init_moe_params(key, cfg, dtype)}
+    ks = jax.random.split(key, 3)
+    return {
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "wi_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        "wi_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dtype),
+    }
+
+
+def _init_block(key, cfg, spec, dtype):
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    if mixer == ATTN:
+        p = {"ln": jnp.ones((cfg.d_model,), dtype),
+             "attn": attn.init_attn_params(k1, cfg, dtype)}
+    elif mixer == MAMBA:
+        p = {"ln": jnp.ones((cfg.d_model,), dtype),
+             "mamba": mamba_mod.init_mamba_params(k1, cfg, dtype)}
+    elif mixer == MLSTM:
+        p = {"mlstm": xlstm_mod.init_mlstm_params(k1, cfg, dtype)}
+    elif mixer == SLSTM:
+        p = {"slstm": xlstm_mod.init_slstm_params(k1, cfg, dtype)}
+    else:
+        raise ValueError(mixer)
+    p.update(_init_ffn(k2, cfg, ffn, dtype))
+    return p
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    specs = block_specs(cfg)
+    keys = jax.random.split(key, len(specs) * cfg.n_periods + 3)
+
+    def stack_block(i):
+        per = [_init_block(keys[j * len(specs) + i], cfg, specs[i], dtype)
+               for j in range(cfg.n_periods)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    params = {
+        "periods": {f"b{i}": stack_block(i) for i in range(len(specs))},
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "head_w": dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+    if cfg.input_mode == "tokens":
+        params["embed"] = {"table": dense_init(keys[-2],
+                                               (cfg.vocab_size, cfg.d_model), dtype)}
+    return params
+
+
+def init_params_shape(cfg, dtype=None):
+    """Shape-only init (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _apply_ffn(cfg, spec, bp, x, ctx, single=False):
+    _, ffn = spec
+    if ffn == "none":
+        return x
+    h = apply_norm(cfg, x, bp["ln2"])
+    if ffn == "moe":
+        if single:
+            delta = moe_mod.moe_ffn_single(cfg, bp, h, ctx)
+        else:
+            delta = moe_mod.moe_ffn(cfg, bp, h, ctx)
+    else:
+        delta = swiglu(h, bp["wi_gate"], bp["wi_up"], bp["w_down"], ctx)
+    if ctx:
+        # constrain the TP-partial output to the SP layout BEFORE the
+        # residual add so GSPMD emits reduce-scatter, not all-reduce+slice
+        delta = ctx.act_btd(delta)
+    x = x + delta
+    return ctx.act_btd(x) if ctx else x
+
+
+def apply_block_train(cfg, spec, bp, x, positions, ctx, return_cache=False):
+    mixer, _ = spec
+    cache = None
+    if mixer == ATTN:
+        h = apply_norm(cfg, x, bp["ln"])
+        if return_cache:
+            delta, (k, v) = attn.attention_block(cfg, bp["attn"], h, positions,
+                                                 ctx, return_cache=True)
+            cache = {"k": k, "v": v}
+        else:
+            delta = attn.attention_block(cfg, bp["attn"], h, positions, ctx)
+        if ctx:
+            delta = ctx.act_btd(delta)
+    elif mixer == MAMBA:
+        h = apply_norm(cfg, x, bp["ln"])
+        delta, _ = mamba_mod.mamba_block(cfg, bp["mamba"], h, None, ctx)
+    elif mixer == MLSTM:
+        delta, _ = xlstm_mod.mlstm_block(cfg, bp["mlstm"], x, None, ctx)
+    elif mixer == SLSTM:
+        delta, _ = xlstm_mod.slstm_block(cfg, bp["slstm"], x, None, ctx)
+    x = x + delta
+    if ctx:
+        x = ctx.act_btd(x)
+    x = _apply_ffn(cfg, spec, bp, x, ctx)
+    if return_cache:
+        return x, cache
+    return x
+
+
+def apply_block_decode(cfg, spec, bp, x, state, pos, ctx):
+    mixer, _ = spec
+    if mixer == ATTN:
+        h = apply_norm(cfg, x, bp["ln"])
+        delta, ck, cv = attn.decode_attention_block(
+            cfg, bp["attn"], h, state["k"], state["v"], pos, ctx)
+        new_state = {"k": ck, "v": cv}
+    elif mixer == MAMBA:
+        h = apply_norm(cfg, x, bp["ln"])
+        delta, new_state = mamba_mod.mamba_block(cfg, bp["mamba"], h, state, ctx)
+    elif mixer == MLSTM:
+        delta, new_state = xlstm_mod.mlstm_block(cfg, bp["mlstm"], x, state, ctx)
+    elif mixer == SLSTM:
+        delta, new_state = xlstm_mod.slstm_block(cfg, bp["slstm"], x, state, ctx)
+    x = x + delta
+    return _apply_ffn(cfg, spec, bp, x, ctx, single=True), new_state
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg, params, batch, ctx):
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"]
+        positions = batch["positions"]
+    else:
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        positions = positions_for(cfg, tokens.shape[0], tokens.shape[1])
+    if ctx:
+        x = ctx.act_btd(x)
+    return x, positions
+
+
+def forward(cfg, params, batch, ctx=None, remat=None):
+    """Training/prefill forward -> logits (B, S, V)."""
+    specs = block_specs(cfg)
+    x, positions = embed_inputs(cfg, params, batch, ctx)
+
+    def period_body(x, period_params):
+        for i, spec in enumerate(specs):
+            x = apply_block_train(cfg, spec, period_params[f"b{i}"],
+                                  x, positions, ctx)
+        return x, None
+
+    body = _maybe_remat(period_body, remat if remat is not None
+                        else cfg.sharding.remat)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head_w"])
+    if ctx:
+        logits = ctx.logits(logits)
+    return logits
+
+
+def _maybe_remat(fn, policy):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def loss_fn(cfg, params, batch, ctx=None, remat=None):
+    logits = forward(cfg, params, batch, ctx, remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg, batch, max_len, dtype=None):
+    """Stacked per-period decode state matching params['periods'] layout."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    specs = block_specs(cfg)
+    P = cfg.n_periods
+
+    def one(spec):
+        mixer, _ = spec
+        if mixer == ATTN:
+            return {"k": jnp.zeros((P, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((P, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype)}
+        if mixer == MAMBA:
+            st = mamba_mod.init_mamba_state(cfg, batch, dtype)
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+        if mixer == MLSTM:
+            st = xlstm_mod.init_mlstm_state(cfg, batch)
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+        if mixer == SLSTM:
+            st = xlstm_mod.init_slstm_state(cfg, batch)
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+        raise ValueError(mixer)
+
+    return {f"b{i}": one(spec) for i, spec in enumerate(specs)}
+
+
+def decode_step(cfg, params, state, batch, ctx=None):
+    """One-token decode.  batch: {"tokens": (B, 1) or "embeds": (B,1,d),
+    "pos": scalar int32 current position}.  Returns (logits (B, V), state)."""
+    specs = block_specs(cfg)
+    pos = batch["pos"]
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"]
+    else:
+        x = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+
+    def period_body(x, inp):
+        period_params, period_state = inp
+        new_states = {}
+        for i, spec in enumerate(specs):
+            x, ns = apply_block_decode(cfg, spec, period_params[f"b{i}"],
+                                       x, period_state[f"b{i}"], pos, ctx)
+            new_states[f"b{i}"] = ns
+        return x, new_states
+
+    x, new_state = jax.lax.scan(period_body, x, (params["periods"], state))
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head_w"])[:, 0]
+    if ctx:
+        logits = ctx.constrain(logits, jax.sharding.PartitionSpec(
+            ctx.dp_axes or None, ctx.tp_axis))
+    return logits, new_state
+
+
+def prefill(cfg, params, batch, ctx=None):
+    """Prefill pass: forward + emit per-layer KV caches (attention blocks).
+
+    K/V projections are shared with the attention compute (no double
+    projection) via ``return_cache``.
+    """
+    specs = block_specs(cfg)
+    x, positions = embed_inputs(cfg, params, batch, ctx)
+
+    def period_body(x, period_params):
+        caches = {}
+        for i, spec in enumerate(specs):
+            x, cache = apply_block_train(cfg, spec, period_params[f"b{i}"],
+                                         x, positions, ctx, return_cache=True)
+            if cache is not None:
+                if ctx:
+                    cache = {kk: ctx.constrain(vv, ctx.kv_cache_spec())
+                             for kk, vv in cache.items()}
+                caches[f"b{i}"] = cache
+        return x, caches
+
+    x, caches = jax.lax.scan(period_body, x, params["periods"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head_w"])[:, 0]
+    return logits, caches

@@ -1,0 +1,292 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential recurrence).
+
+Simplifications vs the reference CUDA implementation (recorded per DESIGN.md
+hardware-adaptation mandate):
+  * mLSTM uses the stabilised exponential-gate chunkwise form with a running
+    per-head max stabiliser carried across chunks (m-state), matching the
+    paper's numerics; q/k/v are per-head block-diagonal projections.
+  * sLSTM keeps the exact sequential semantics via lax.scan over time — on
+    TPU this is latency-bound (the original work ships fused CUDA kernels;
+    the TPU-native answer is the chunkwise mLSTM path carrying most layers,
+    with sLSTM at 1-in-8 per the xLSTM[7:1] recipe).
+
+Decode for both is an O(1) state update => the long_500k cell runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, layer_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = di // nh
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "up_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "m_wq": dense_init(ks[1], (nh, dh, dh), dtype),
+        "m_wk": dense_init(ks[2], (nh, dh, dh), dtype),
+        "m_wv": dense_init(ks[3], (nh, dh, dh), dtype),
+        "w_ig": dense_init(ks[4], (d, nh), dtype),   # input gate (pre-act)
+        "w_fg": dense_init(ks[5], (d, nh), dtype),   # forget gate (pre-act)
+        "b_ig": jnp.zeros((nh,), dtype),
+        "b_fg": jnp.full((nh,), 3.0, dtype),         # bias toward remembering
+        "w_og": dense_init(ks[6], (d, di), dtype),   # output gate
+        "gn": jnp.ones((di,), dtype),                # per-head group norm scale
+        "down_proj": dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def init_mlstm_state(cfg, batch):
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, xs, nh, dh):
+    B, S, di = xs.shape
+    xh = xs.reshape(B, S, nh, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["m_wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, p["m_wk"]) * dh ** -0.5
+    v = jnp.einsum("bshd,hde->bshe", xh, p["m_wv"])
+    return q, k, v
+
+
+def mlstm_mix(p, x, xs, state, chunk=256):
+    """Chunkwise-parallel stabilised mLSTM.
+
+    x: (B, S, d) block input (drives the gates); xs: (B, S, di) up-projected
+    stream.  Returns (y (B, S, di), new_state).
+    """
+    B, S, di = xs.shape
+    nh = p["m_wq"].shape[0]
+    dh = di // nh
+    q, k, v = _mlstm_qkv(p, xs, nh, dh)
+    x32 = x.astype(jnp.float32)
+    ig = (x32 @ p["w_ig"].astype(jnp.float32) + p["b_ig"].astype(jnp.float32))
+    fg = (x32 @ p["w_fg"].astype(jnp.float32) + p["b_fg"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(fg)                                  # (B,S,nh)
+
+    if S == 1:
+        return _mlstm_step(p, q, k, v, ig, fg, state)
+
+    if S % chunk != 0:
+        chunk = S
+    T = S // chunk
+
+    def reshape_c(a):
+        return a.reshape((B, T, chunk) + a.shape[2:])
+    qc, kc, vc = map(reshape_c, (q, k, v))
+    igc, logfc = map(reshape_c, (ig, logf))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, igb, logfb = inp       # (B,c,nh,dh)... gates (B,c,nh)
+        c = qb.shape[1]
+        # cumulative log forget within chunk: F_t = sum_{u<=t} logf_u
+        F = jnp.cumsum(logfb, axis=1)                              # (B,c,nh)
+        Ftot = F[:, -1]
+        # stabiliser: max over (inter: m + F_t) and (intra: F_t - F_u + ig_u)
+        # log "a" coefficients for inter-chunk contribution
+        log_inter = m[:, None] + F                                 # (B,c,nh)
+        # intra-chunk pair logits: d_{tu} = F_t - F_u + ig_u  (u <= t)
+        dmat = F[:, :, None] - F[:, None, :] + igb[:, None, :]     # (B,c,c,nh) t,u
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)                            # (B,c,nh)
+        m_new_t = jnp.maximum(log_inter, m_intra)                  # (B,c,nh)
+        # normalised weights
+        inter_w = jnp.exp(log_inter - m_new_t)                     # (B,c,nh)
+        intra_w = jnp.exp(dmat - m_new_t[:, :, None])              # (B,c,c,nh)
+        # intra attention-style contribution
+        scores = jnp.einsum("bthd,buhd->btuh", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32))
+        num_intra = jnp.einsum("btuh,buhd->bthd", scores * intra_w,
+                               vb.astype(jnp.float32))
+        den_intra = jnp.sum(scores * intra_w, axis=2)
+        # inter contribution via carried state
+        qf = qb.astype(jnp.float32) * inter_w[..., None]
+        num_inter = jnp.einsum("bthd,bhde->bthe", qf, C)
+        den_inter = jnp.einsum("bthd,bhd->bth", qf, n)
+        num = num_intra + num_inter
+        den = jnp.abs(den_intra + den_inter)
+        y = num / jnp.maximum(den, jnp.exp(-m_new_t))[..., None]
+        # update carried state to end of chunk
+        m_next = jnp.maximum(m + Ftot, jnp.max(Ftot[:, None] - F + igb, axis=1))
+        decay = jnp.exp(m + Ftot - m_next)                         # (B,nh)
+        kv_w = jnp.exp(Ftot[:, None] - F + igb - m_next[:, None])  # (B,c,nh)
+        kw = kb.astype(jnp.float32) * kv_w[..., None]
+        C_next = C * decay[..., None, None] + jnp.einsum(
+            "buhd,buhe->bhde", kw, vb.astype(jnp.float32))
+        n_next = n * decay[..., None] + jnp.sum(kw, axis=1)
+        return (C_next, n_next, m_next), y
+
+    (C, n, m), ys = jax.lax.scan(
+        body, (state["C"], state["n"], state["m"]),
+        tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, igc, logfc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    return y.astype(xs.dtype), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_step(p, q, k, v, ig, fg, state):
+    """Single-token decode update."""
+    B = q.shape[0]
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]            # (B,nh,dh)
+    ig1, logf1 = ig[:, 0], jax.nn.log_sigmoid(fg[:, 0])  # (B,nh)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf1 + m, ig1)
+    fw = jnp.exp(logf1 + m - m_new)[..., None, None]
+    iw = jnp.exp(ig1 - m_new)[..., None, None]
+    C = C * fw + iw * jnp.einsum("bhd,bhe->bhde", k1.astype(jnp.float32),
+                                 v1.astype(jnp.float32))
+    n = n * fw[..., 0] + iw[..., 0] * k1.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q1.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q1.astype(jnp.float32), n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    di = y.shape[1] * y.shape[2]
+    return y.reshape(B, 1, di).astype(q.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(cfg, p, x, state=None, ctx=None):
+    """Full mLSTM residual block.  x: (B, S, d)."""
+    B, S, d = x.shape
+    di = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    h = layer_norm(x, p["ln"])
+    uz = jnp.einsum("bsd,de->bse", h, p["up_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    if state is None:
+        st = init_mlstm_state(cfg, B)
+    else:
+        st = state
+    y, new_state = mlstm_mix(p, h, u, st)
+    # per-head group norm + output gate
+    y = layer_norm(y.reshape(B, S, nh, di // nh),
+                   p["gn"].reshape(nh, di // nh)).reshape(B, S, di)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", h, p["w_og"]))
+    y = y * og * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    return out, (new_state if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dff = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype),
+        "r_gates": dense_init(ks[1], (nh, dh, 4 * dh), dtype),
+        "b_gates": jnp.concatenate([jnp.zeros((2 * d,), dtype),
+                                    jnp.full((d,), 3.0, dtype),
+                                    jnp.zeros((d,), dtype)]),
+        "ln2": jnp.ones((d,), dtype),
+        "ff_up": dense_init(ks[2], (d, dff), dtype),
+        "ff_down": dense_init(ks[3], (dff, d), dtype),
+    }
+
+
+def init_slstm_state(cfg, batch):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "nn": jnp.zeros((batch, d), jnp.float32),
+        "mm": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(cfg, r, carry, wx_t):
+    """One recurrent step.  carry: 4 x (B, d) f32; wx_t: (B, 4d)."""
+    nh = cfg.n_heads
+    d = cfg.d_model
+    dh = d // nh
+    h, c, n, m = carry
+    hh = h.reshape(-1, nh, dh)
+    # per-head block-diagonal recurrence; r's last dim is [zi|ii|ff|oo] per
+    # head (dh each) — rearrange to wx's layout (4 gate blocks of d) before
+    # the gate split
+    rec = jnp.einsum("bhd,hde->bhe", hh, r)          # (B, nh, 4*dh)
+    rec = rec.reshape(-1, nh, 4, dh).transpose(0, 2, 1, 3).reshape(-1, 4 * d)
+    zi, ii, ff, oo = jnp.split(wx_t.astype(jnp.float32) + rec, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(logf + m, ii)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(ii - m_new)
+    c_new = fw * c + iw * jnp.tanh(zi)
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(oo) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def _slstm_scan(cfg, p, wx, state, chunk=16):
+    """wx: (B, S, 4d) precomputed input contributions.  Sequential over S.
+
+    The time loop is CHUNKED: an outer scan over S/chunk iterations with
+    `chunk` unrolled recurrent steps per body.  A per-timestep while loop
+    pays fixed loop-carry costs (copies, stacked-output update patterns)
+    every step — measured ~9 TB/chip of loop overhead on the train_4k cell;
+    unrolling 16 steps per iteration amortises it ~16x (EXPERIMENTS.md
+    §Perf, xlstm iteration B1)."""
+    B, S, _ = wx.shape
+    r = p["r_gates"].astype(jnp.float32)                 # (nh, dh, 4dh)
+    carry0 = (state["h"], state["c"], state["nn"], state["mm"])
+
+    if S % chunk != 0 or S <= chunk:
+        @jax.checkpoint
+        def step(carry, wx_t):
+            return _slstm_cell(cfg, r, carry, wx_t)
+        carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+        y = jnp.moveaxis(hs, 0, 1)
+    else:
+        T = S // chunk
+        wx_c = jnp.moveaxis(
+            wx.reshape(B, T, chunk, wx.shape[-1]), 1, 0)  # (T,B,chunk,4d)
+
+        @jax.checkpoint
+        def block(carry, wx_blk):
+            hs = []
+            for t in range(chunk):                        # unrolled
+                carry, h = _slstm_cell(cfg, r, carry, wx_blk[:, t])
+                hs.append(h)
+            return carry, jnp.stack(hs, axis=1)           # (B,chunk,d)
+        carry, ys = jax.lax.scan(block, carry0, wx_c)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, -1)
+    h, c, n, m = carry
+    return y, {"h": h, "c": c, "nn": n, "mm": m}
+
+
+def slstm_block(cfg, p, x, state=None, ctx=None):
+    B, S, d = x.shape
+    h = layer_norm(x, p["ln"])
+    wx = jnp.einsum("bsd,de->bse", h, p["w_gates"]) + p["b_gates"]
+    st = state if state is not None else init_slstm_state(cfg, B)
+    y, new_state = _slstm_scan(cfg, p, wx, st)
+    y = y.astype(x.dtype)
+    # post-FFN (GeLU), per xLSTM block recipe.  Block returns a residual
+    # delta (caller adds x): delta = y + ffn(ln2(x + y)).
+    mid = x + y
+    hf = layer_norm(mid, p["ln2"])
+    f = jnp.einsum("bsd,df->bsf", hf, p["ff_up"])
+    delta = y + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(f), p["ff_down"])
+    return delta, (new_state if state is not None else None)

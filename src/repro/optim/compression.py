@@ -1,0 +1,90 @@
+"""Update/gradient compression for the rollup commit payload.
+
+Distributed-optimization tricks (DESIGN.md §7):
+  * int8 stochastic-rounding quantization with per-block scales — shrinks
+    the commit's all-reduce payload ~2x vs bf16 / 4x vs f32;
+  * top-k sparsification with error feedback — residuals accumulate locally
+    and re-enter the next commit, preserving convergence (Stich et al.).
+Both are pure-jnp pytree transforms usable inside the jitted fl_round.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray, key=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization; optional stochastic rounding."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = blocks / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_tree(tree, key=None):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    qs = [quantize_int8(l, k) for l, k in zip(leaves, keys)]
+    meta = [(l.shape, l.dtype) for l in leaves]
+    return {"q": treedef.unflatten([q for q, _ in qs]),
+            "scale": treedef.unflatten([s for _, s in qs])}, (treedef, meta)
+
+
+def dequantize_tree(packed, info):
+    treedef, meta = info
+    qs = treedef.flatten_up_to(packed["q"])
+    ss = treedef.flatten_up_to(packed["scale"])
+    out = [dequantize_int8(q, s, shape, dtype)
+           for q, s, (shape, dtype) in zip(qs, ss, meta)]
+    return treedef.unflatten(out)
+
+
+# -- top-k + error feedback ------------------------------------------------------
+def topk_sparsify(x: jnp.ndarray, frac: float = 0.01):
+    """Keep the largest-|.| frac entries; return (sparse_x, kept_mask)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(x.shape).astype(x.dtype), mask.reshape(x.shape)
+
+
+def ef_compress_tree(update_tree, residual_tree, frac: float = 0.01):
+    """Error-feedback top-k: compress (update + residual), carry the rest."""
+    def one(u, r):
+        tot = u.astype(jnp.float32) + r.astype(jnp.float32)
+        kept, mask = topk_sparsify(tot, frac)
+        new_resid = tot - kept.astype(jnp.float32)
+        return kept.astype(u.dtype), new_resid.astype(r.dtype)
+    out = jax.tree.map(one, update_tree, residual_tree)
+    kept = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return kept, resid
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,182 @@
+"""Optimizers (pure JAX, pytree-native, sharding-friendly).
+
+* adamw     — bf16 moments by default (halves optimizer HBM vs fp32).
+* adafactor — factored second moment (beta1=0): the memory-fitting choice
+              for the 398B/1T archs (see DESIGN.md memory notes).
+* sgdm      — plain momentum.
+
+States mirror param sharding (factored adafactor states drop the factored
+dim's spec) so FSDP/ZeRO-3 covers optimizer memory automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    name: str = "adamw"
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: str = "bfloat16"
+    # adafactor
+    factored_min: int = 128     # factor only dims >= this
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, new_state)
+
+
+def _global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def make_optimizer(spec: OptimizerSpec) -> Optimizer:
+    if spec.name == "adamw":
+        return _adamw(spec)
+    if spec.name == "adafactor":
+        return _adafactor(spec)
+    if spec.name == "sgdm":
+        return _sgdm(spec)
+    raise ValueError(spec.name)
+
+
+# -- AdamW ---------------------------------------------------------------------
+def _adamw(spec: OptimizerSpec) -> Optimizer:
+    mdt = jnp.dtype(spec.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gn = _clip_by_global_norm(grads, spec.grad_clip)
+        step = state["step"] + 1
+        b1, b2 = spec.beta1, spec.beta2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + spec.eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - spec.lr * (delta + spec.weight_decay * p32)
+            return p32.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}, gn
+
+    return Optimizer(init, update)
+
+
+# -- Adafactor --------------------------------------------------------------------
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def _adafactor(spec: OptimizerSpec) -> Optimizer:
+    def init(params):
+        def vstate(p):
+            if _factored(p.shape, spec.factored_min):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(vstate, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gn = _clip_by_global_norm(grads, spec.grad_clip)
+        step = state["step"] + 1
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8  # beta2 schedule
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + 1e-30
+            if "vr" in v:
+                vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                                       1e-30))
+                newv = {"vr": vr, "vc": vc}
+            else:
+                newv = {"v": decay * v["v"] + (1 - decay) * g2}
+                denom = newv["v"]
+            delta = g32 * jax.lax.rsqrt(denom + 1e-30)
+            # update clipping (adafactor rms-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - spec.lr * (delta + spec.weight_decay * p32)
+            return p32.astype(p.dtype), newv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"v": new_v, "step": step}, gn
+
+    return Optimizer(init, update)
+
+
+# -- SGD + momentum -----------------------------------------------------------------
+def _sgdm(spec: OptimizerSpec) -> Optimizer:
+    mdt = jnp.dtype(spec.moment_dtype)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gn = _clip_by_global_norm(grads, spec.grad_clip)
+
+        def upd(p, g, m):
+            m32 = spec.beta1 * m.astype(jnp.float32) + g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32) - spec.lr * m32
+            return p32.astype(p.dtype), m32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "step": state["step"] + 1}, gn
+
+    return Optimizer(init, update)
+
+
+def spec_for_config(cfg) -> OptimizerSpec:
+    return OptimizerSpec(name=cfg.optimizer)

@@ -1,0 +1,258 @@
+"""Sharding policies: map params / activations / caches onto the mesh.
+
+Axis conventions (launch/mesh.py):
+  single-pod : (16, 16)      -> ("data", "model")
+  multi-pod  : (2, 16, 16)   -> ("pod", "data", "model")
+
+Policies:
+  DP    batch over ("pod","data")        (FL trainers = data-axis groups)
+  FSDP  params / opt state over "data"
+  TP    matmul contract/output dims over "model"
+  EP    MoE experts over "model"
+  SP    residual-stream seq dim over "model" (big archs)
+  KV-SP decode KV-cache seq dim over "model"
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class MeshCtx:
+    """Carries the mesh + the architecture's ShardingPolicy.
+
+    When ``mesh is None`` every helper degrades to a no-op so the same model
+    code runs in single-device smoke tests.
+    """
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh], policy):
+        self.mesh = mesh
+        self.policy = policy
+        if mesh is not None:
+            names = mesh.axis_names
+            self.has_pod = "pod" in names
+            self.dp_axes = ("pod", "data") if self.has_pod else ("data",)
+            self.fsdp_axis = "data" if policy.fsdp else None
+            self.tp_axis = "model" if policy.tensor_parallel else None
+            self.ep_axis = "model" if policy.expert_parallel else None
+            self.sp_axis = "model" if policy.sequence_parallel else None
+            self.model_size = mesh.shape["model"]
+            self.data_size = mesh.shape["data"]
+        else:
+            self.has_pod = False
+            self.dp_axes = ()
+            self.fsdp_axis = self.tp_axis = self.ep_axis = self.sp_axis = None
+            self.model_size = self.data_size = 1
+
+    # -- helpers -------------------------------------------------------------
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # -- activation specs ----------------------------------------------------
+    def act_btd(self, x):
+        """Residual stream (B, S, d): DP on batch, SP on seq if enabled."""
+        return self.constrain(x, P(self.dp_axes or None, self.sp_axis, None))
+
+    def act_heads(self, x):
+        """Per-head activations (B, S, H, dh): TP on heads."""
+        return self.constrain(x, P(self.dp_axes or None, None, self.tp_axis, None))
+
+    def act_ffn(self, x):
+        """FFN hidden (B, S, ff): TP on ff."""
+        return self.constrain(x, P(self.dp_axes or None, None, self.tp_axis))
+
+    def logits(self, x):
+        """LM logits (B, S, V): vocab over model (keeps 150k-vocab local)."""
+        return self.constrain(x, P(self.dp_axes or None, None, self.tp_axis))
+
+    # -- batch specs -----------------------------------------------------------
+    def batch_spec(self) -> P:
+        return P(self.dp_axes or None)
+
+    def kv_cache_spec(self) -> P:
+        """(B, S, Hkv, dh) — batch over DP; seq over model if kv_seq_shard."""
+        if self.policy.kv_seq_shard:
+            return P(self.dp_axes or None, "model" if self.mesh is not None else None,
+                     None, None)
+        return P(self.dp_axes or None, None, self.tp_axis, None)
+
+
+# -----------------------------------------------------------------------------
+# Parameter partition rules.  Params are nested dicts; leaves are stacked with
+# a leading period dim (never sharded).  Rules match on the leaf's path names.
+# -----------------------------------------------------------------------------
+def param_spec(ctx: MeshCtx, path: tuple, shape: tuple) -> P:
+    """PartitionSpec for one parameter leaf given its tree path."""
+    if ctx.mesh is None:
+        return P()
+    fsdp, tp = ctx.fsdp_axis, ctx.tp_axis
+    name = path[-1]
+    joined = "/".join(str(p) for p in path)
+    stacked = "periods" in joined or "enc_periods" in joined
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        out = lead + tuple(dims)
+        assert len(out) == len(shape), (joined, shape, out)
+        return P(*out)
+
+    ndim = len(shape) - len(lead)
+
+    # embeddings ------------------------------------------------------------
+    if name == "table":            # (V, d) input embedding
+        return P(tp, fsdp)
+    if name == "head_w":           # (d, V) output head
+        return P(fsdp, tp)
+    if name in ("pos", "dec_pos"):  # learned positions (S, d)
+        return P(None, fsdp)
+
+    # norms / biases / small vectors -----------------------------------------
+    if ndim == 1:
+        return spec(None)
+
+    # MoE expert stacks (E, d, f) / (E, f, d) ---------------------------------
+    if name in ("moe_wg", "moe_wu"):   # (E, d, ff_e)
+        return spec(ctx.ep_axis, fsdp, None)
+    if name == "moe_wo":               # (E, ff_e, d)
+        return spec(ctx.ep_axis, None, fsdp)
+    if name == "router":               # (d, E)
+        return spec(fsdp, None)
+
+    # attention --------------------------------------------------------------
+    if name in ("wq", "wk", "wv"):     # (d, H*dh)
+        return spec(fsdp, tp)
+    if name == "wo":                   # (H*dh, d)
+        return spec(tp, fsdp)
+
+    # dense mlp ---------------------------------------------------------------
+    if name in ("wi_gate", "wi_up"):   # (d, ff)
+        return spec(fsdp, tp)
+    if name == "w_down":               # (ff, d)
+        return spec(tp, fsdp)
+
+    # mamba -------------------------------------------------------------------
+    if name == "in_proj":              # (d, 2*di)
+        return spec(fsdp, tp)
+    if name == "out_proj":             # (di, d)
+        return spec(tp, fsdp)
+    if name in ("x_dt", "x_B", "x_C"):  # (di, r/ds)
+        return spec(tp, None)
+    if name == "dt_proj":              # (r, di)
+        return spec(None, tp)
+    if name in ("A_log", "conv_w"):    # (di, ds) / (di, k)
+        return spec(tp, None)
+
+    # xLSTM -------------------------------------------------------------------
+    if name == "up_proj":              # (d, 2*di)
+        return spec(fsdp, tp)
+    if name == "down_proj":            # (di, d)
+        return spec(tp, fsdp)
+    if name in ("m_wq", "m_wk", "m_wv"):  # (nh, dh, dh) block-diag per head
+        return spec(tp, None, None) if shape[len(lead)] % max(ctx.model_size, 1) == 0 \
+            else spec(None, tp, None)
+    if name in ("w_gates",):           # (d, n*d) sLSTM input gates
+        return spec(fsdp, tp)
+    if name == "r_gates":              # (nh, dh, 4*dh) sLSTM recurrent
+        return spec(None, None, tp)
+    if name in ("ff_up",):             # (d, dff)
+        return spec(fsdp, tp)
+    if name == "ff_down":              # (dff, d)
+        return spec(tp, fsdp)
+
+    # conv / lenet / fallback ---------------------------------------------------
+    if ndim == 2:
+        return spec(fsdp, tp)
+    return P(*([None] * len(shape)))
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim.
+
+    pjit rejects *argument* shardings with non-divisible dims (unlike
+    internal with_sharding_constraint, which pads).  Centralised here so
+    nh=4-over-16-TP, vocab=51865, B=1-decode etc. degrade to replication
+    instead of erroring.
+    """
+    if mesh is None:
+        return spec
+    sizes = dict(mesh.shape)
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        out.append(entry if dim % prod == 0 else None)
+    return P(*out)
+
+
+def sanitize_pspec_tree(mesh, pspec_tree, shape_tree):
+    return jax.tree.map(
+        lambda s, l: sanitize_spec(mesh, s, l.shape), pspec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_spec(ctx: MeshCtx, path: tuple, shape: tuple) -> P:
+    """PartitionSpec for a decode-state leaf (leading stacked layer dim)."""
+    if ctx.mesh is None:
+        return P()
+    dp, tp = (ctx.dp_axes or None), ctx.tp_axis
+    name = str(path[-1])
+    kv_seq = "model" if ctx.policy.kv_seq_shard else None
+    table = {
+        "k": P(None, dp, kv_seq, None, None),
+        "v": P(None, dp, kv_seq, None, None),
+        "ek": P(None, dp, None, None, None),
+        "ev": P(None, dp, None, None, None),
+        "conv": P(None, dp, None, tp),
+        "ssm": P(None, dp, tp, None),
+        "C": P(None, dp, None, tp, None),
+        "n": P(None, dp, None, tp),
+        "m": P(None, dp, None),
+        "h": P(None, dp, tp),
+        "c": P(None, dp, tp),
+        "nn": P(None, dp, tp),
+        "mm": P(None, dp, tp),
+    }
+    spec = table.get(name)
+    if spec is None or len(spec) != len(shape):
+        return P(*([None] * len(shape)))
+    return spec
+
+
+def state_pspec_tree(ctx: MeshCtx, state_shape):
+    def _walk(path, node):
+        if isinstance(node, dict):
+            return {k: _walk(path + (k,), v) for k, v in node.items()}
+        return state_spec(ctx, path, node.shape)
+    return _walk((), state_shape)
+
+
+def params_pspec_tree(ctx: MeshCtx, params_shape):
+    """Pytree of PartitionSpecs matching a params shape-tree."""
+    def _walk(path, node):
+        if isinstance(node, dict):
+            return {k: _walk(path + (k,), v) for k, v in node.items()}
+        return param_spec(ctx, path, node.shape)
+    return _walk((), params_shape)
+
+
+def params_sharding_tree(ctx: MeshCtx, params_shape):
+    if ctx.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        params_pspec_tree(ctx, params_shape),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,93 @@
+"""End-to-end FL protocol tests (the paper's PoC): full task lifecycle with
+behavior profiles, oracle quorum, rollup settlement, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.oracle import DONConfig, evaluate_quorum
+from repro.data.pipeline import client_batch_fn
+from repro.data.synthetic import make_mnist_like
+from repro.fl.client import ClientConfig, TrainingAgent
+from repro.fl.dp import DPConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.server import AutoDFL
+from repro.models import lenet
+from repro.models.model import build_model
+from repro.optim.optimizers import OptimizerSpec, make_optimizer
+
+
+@pytest.fixture(scope="module")
+def fl_world():
+    cfg = get_config("lenet5")
+    model = build_model(cfg)
+    opt = make_optimizer(OptimizerSpec(name="sgdm", lr=0.05, grad_clip=5.0))
+    xs, ys = make_mnist_like(1536, seed=1)
+    val = {"images": jnp.asarray(xs[:256]), "labels": jnp.asarray(ys[:256])}
+    parts = dirichlet_partition(ys[256:], 4, alpha=2.0, seed=0)
+    raw = client_batch_fn(xs[256:], ys[256:], parts, 64)
+    bf = lambda c, r: {k: jnp.asarray(v) for k, v in raw(c, r).items()}
+    eval_fn = jax.jit(lambda p, b: lenet.accuracy(cfg, p, b))
+    return cfg, model, opt, val, bf, eval_fn
+
+
+def test_full_protocol_and_convergence(fl_world):
+    cfg, model, opt, val, bf, eval_fn = fl_world
+    sys = AutoDFL(model, opt, 4, eval_fn, val, use_rollup=True)
+    behaviors = ["good", "good", "malicious", "lazy"]
+    agents = [TrainingAgent(
+        ClientConfig(f"trainer{i}", behaviors[i],
+                     dp=DPConfig(noise_multiplier=0.05)),
+        model, opt, sys.store, bf, seed=i) for i in range(4)]
+    res = None
+    for t in range(3):
+        res = sys.run_task(f"task{t}", agents, bf, rounds=4)
+    reps = res.reputations
+    # paper Fig. 3 phenomenology
+    assert reps[0] > 0.7 and reps[1] > 0.7        # good trainers rise
+    assert reps[2] < 0.35                         # malicious collapses
+    assert reps[2] < reps[3] < reps[0]            # lazy in between
+    # global model converges despite the attacker (Eq. 1 downweights it)
+    assert float(eval_fn(res.global_params, val)) > 0.9
+    # free-rider got (almost) nothing; good trainers paid
+    assert res.payouts["trainer2"] < 0.2 * res.payouts["trainer0"]
+    # ledger settled rollup batches with Table-I-shaped gas
+    assert sys.rollup.gas_log and all(
+        b["verify"] > 0 and b["execute"] > 0 for b in sys.rollup.gas_log)
+
+
+def test_oracle_quorum_resists_badmouthing(fl_world):
+    cfg, model, opt, val, bf, eval_fn = fl_world
+    params = [model.init_params(jax.random.key(i)) for i in range(3)]
+    honest, _ = evaluate_quorum(eval_fn, params, val, DONConfig(n_oracles=5))
+    # two colluding oracles forge perfect scores (reputation-boosting) —
+    # the median aggregate stays with the honest majority
+    attacked, report = evaluate_quorum(
+        eval_fn, params, val, DONConfig(n_oracles=5),
+        adversarial_oracles={0: 1.0, 1: 1.0})
+    np.testing.assert_allclose(np.asarray(attacked), np.asarray(honest),
+                               atol=0.15)
+    assert set(report["flagged_oracles"]) == {0, 1}
+    # 3/5 honest violates the paper's 2/3 assumption -> quorum must FAIL
+    assert not report["quorum_ok"]
+    # a single forger (4/5 honest) keeps the quorum
+    _, rep1 = evaluate_quorum(eval_fn, params, val, DONConfig(n_oracles=5),
+                              adversarial_oracles={0: 1.0})
+    assert rep1["quorum_ok"] and rep1["flagged_oracles"] == [0]
+
+
+def test_access_control_sybil_whitewash(fl_world):
+    cfg, model, opt, val, bf, eval_fn = fl_world
+    sys = AutoDFL(model, opt, 2, eval_fn, val)
+    acl = sys.acl
+    # non-admin cannot grant
+    with pytest.raises(AssertionError):
+        acl.grant("trainer0", "sybil", "trainer")
+    # banned identity cannot re-enter without majority vote (whitewashing)
+    acl.ban("admin0", "trainer1")
+    with pytest.raises(PermissionError):
+        acl.grant("admin0", "trainer1", "trainer")
+    assert not acl.vote_readmit("admin0", "trainer1")
+    assert acl.vote_readmit("admin1", "trainer1")   # 2/3 majority reached
+    acl.grant("admin0", "trainer1", "trainer")

@@ -1,0 +1,112 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm import gmm
+from repro.kernels.model_distance import model_distance
+from repro.kernels.rollup_digest import rollup_digest
+from repro.kernels.weighted_agg import weighted_agg
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,P,dt,block", [
+    (2, 256, jnp.float32, 128),
+    (4, 1000, jnp.float32, 512),       # padded tail
+    (16, 8192, jnp.bfloat16, 2048),
+    (64, 4096, jnp.bfloat16, 4096),
+    (3, 130, jnp.float32, 512),        # P < block
+])
+def test_weighted_agg_sweep(n, P, dt, block):
+    w = jnp.asarray(RNG.normal(size=(n, P)), dt)
+    s = jnp.asarray(RNG.uniform(0.05, 1.0, n), jnp.float32)
+    got = weighted_agg(w, s, block_p=block, interpret=True)
+    want = ops.weighted_agg_ref(w, s)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dt))
+
+
+def test_weighted_agg_zero_score_trainer_excluded():
+    w = jnp.stack([jnp.ones(256), 100.0 * jnp.ones(256)])
+    s = jnp.array([1.0, 0.0])
+    out = weighted_agg(w.astype(jnp.float32), s, block_p=128, interpret=True)
+    np.testing.assert_allclose(out, jnp.ones(256), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,P,dt", [
+    (4, 1000, jnp.float32),
+    (8, 5000, jnp.bfloat16),
+    (1, 128, jnp.float32),
+])
+def test_model_distance_sweep(n, P, dt):
+    l = jnp.asarray(RNG.normal(size=(n, P)), dt)
+    g = jnp.asarray(RNG.normal(size=(P,)), dt)
+    got = model_distance(l, g, block_p=512, interpret=True)
+    want = ops.model_distance_ref(l, g)
+    np.testing.assert_allclose(got, want, rtol=3e-2 if dt == jnp.bfloat16
+                               else 1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,dh,dt", [
+    (2, 256, 4, 2, 64, jnp.float32),
+    (1, 512, 8, 8, 32, jnp.float32),
+    (2, 256, 8, 2, 64, jnp.bfloat16),
+    (1, 128, 4, 1, 128, jnp.float32),      # MQA
+])
+def test_flash_attention_sweep(B, S, H, Hkv, dh, dt):
+    q = jnp.asarray(RNG.normal(size=(B, S, H, dh)), dt)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), dt)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), dt)
+    got = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    want = ops.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dt))
+
+
+def test_flash_attention_non_causal():
+    q = jnp.asarray(RNG.normal(size=(1, 256, 2, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                          interpret=True)
+    want = ops.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("E,C,d,f,dt", [
+    (8, 96, 64, 200, jnp.float32),
+    (4, 128, 128, 512, jnp.bfloat16),
+    (1, 8, 32, 64, jnp.float32),
+])
+def test_gmm_sweep(E, C, d, f, dt):
+    xe = jnp.asarray(RNG.normal(size=(E, C, d)), dt)
+    w = jnp.asarray(RNG.normal(size=(E, d, f)), dt)
+    got = gmm(xe, w, block_c=32, block_f=64, interpret=True)
+    want = ops.gmm_ref(xe, w)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("P", [128, 10000, 65536])
+def test_rollup_digest_sweep(P):
+    buf = jnp.asarray(RNG.normal(size=(P,)), jnp.float32)
+    got = rollup_digest(buf, block_p=2048, interpret=True)
+    want = ops.rollup_digest_ref(
+        jax.lax.bitcast_convert_type(buf, jnp.uint32))
+    assert got == want
+
+
+def test_rollup_digest_detects_tampering():
+    buf = jnp.asarray(RNG.normal(size=(4096,)), jnp.float32)
+    d0 = rollup_digest(buf, interpret=True)
+    d1 = rollup_digest(buf.at[1234].add(1e-6), interpret=True)
+    assert d0 != d1

@@ -1,0 +1,201 @@
+"""Substrate tests: checkpointing, compression, fault tolerance, DP,
+partitioning, storage, escrow, HLO cost walker."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.escrow import Escrow, InsufficientFunds
+from repro.core.storage import BlobStore
+from repro.fl.dp import DPConfig, clip_update, privatize
+from repro.fl.partition import dirichlet_partition, skew_report
+from repro.optim.compression import (dequantize_tree, ef_compress_tree,
+                                     init_residual, quantize_int8,
+                                     dequantize_int8, quantize_tree)
+from repro.runtime.fault_tolerance import (ElasticController,
+                                           HeartbeatRegistry, RoundDeadline,
+                                           factorize_mesh,
+                                           subset_aggregate_ok)
+
+
+# -- checkpointing -------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "b": np.asarray(jnp.ones((2, 2), jnp.bfloat16))}
+    ck.save(7, tree, extra={"loss": 1.5})
+    got, extra = ck.restore()
+    np.testing.assert_array_equal(got["a"]["w"], tree["a"]["w"])
+    assert str(got["b"].dtype) == "bfloat16"
+    assert extra["loss"] == 1.5
+    assert ck.latest_step() == 7
+
+
+def test_checkpoint_rotation_and_dedup(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = {"w": np.zeros(4, np.float32)}
+    for s in (1, 2, 3):
+        ck.save(s, t)  # identical content -> one blob
+    blobs = os.listdir(os.path.join(str(tmp_path), "blobs"))
+    assert len(blobs) == 1
+    steps = [d for d in os.listdir(str(tmp_path)) if d.startswith("step_")]
+    assert len(steps) == 2  # rotated
+    got, _ = ck.restore()
+    np.testing.assert_array_equal(got["w"], t["w"])
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": np.ones(8, np.float32)})
+    blob_dir = os.path.join(str(tmp_path), "blobs")
+    fn = os.path.join(blob_dir, os.listdir(blob_dir)[0])
+    with open(fn, "r+b") as f:
+        f.seek(0)
+        f.write(b"\xff")
+    with pytest.raises(IOError):
+        ck.restore()
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(5, {"w": jnp.arange(4.0)})
+    ck.wait()
+    got, _ = ck.restore()
+    np.testing.assert_allclose(got["w"], np.arange(4.0))
+
+
+# -- compression ----------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000))
+def test_int8_quantization_error_bound(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape)
+    # error bounded by half a quantization step per block
+    err = np.abs(np.asarray(back - x))
+    step = np.repeat(np.asarray(s), 256)[: n]
+    assert np.all(err <= step * 0.5 + 1e-7)
+
+
+def test_quantize_tree_roundtrip():
+    tree = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(17, 9)),
+                             jnp.float32)}
+    packed, info = quantize_tree(tree)
+    back = dequantize_tree(packed, info)
+    assert back["a"].shape == (17, 9)
+    assert float(jnp.max(jnp.abs(back["a"] - tree["a"]))) < 0.05
+
+
+def test_error_feedback_conserves_mass():
+    """EF invariant: kept + residual == update + old residual (exactly)."""
+    rng = np.random.default_rng(1)
+    upd = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    resid = init_residual(upd)
+    kept, new_resid = ef_compress_tree(upd, resid, frac=0.1)
+    np.testing.assert_allclose(
+        np.asarray(kept["w"] + new_resid["w"]), np.asarray(upd["w"]),
+        rtol=1e-6, atol=1e-7)
+    # sparsity
+    assert np.count_nonzero(np.asarray(kept["w"])) <= 8
+
+
+# -- DP ---------------------------------------------------------------------------
+def test_dp_clip_bounds_norm():
+    tree = {"w": jnp.full((100,), 10.0)}
+    clipped, norm = clip_update(tree, 1.0)
+    total = float(jnp.linalg.norm(clipped["w"]))
+    assert total <= 1.0 + 1e-5 and float(norm) > 1.0
+
+
+def test_dp_noise_changes_update_but_not_shape():
+    tree = {"w": jnp.ones((50,))}
+    out, _ = privatize(jax.random.key(0), tree,
+                       DPConfig(noise_multiplier=1.0, batch_size=4))
+    assert out["w"].shape == (50,)
+    assert float(jnp.max(jnp.abs(out["w"] - tree["w"]))) > 0
+
+
+# -- partitioning -------------------------------------------------------------------
+def test_dirichlet_partition_covers_all():
+    labels = np.random.default_rng(0).integers(0, 10, 1000)
+    parts = dirichlet_partition(labels, 8, alpha=0.5)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 1000 and len(set(allidx.tolist())) == 1000
+    rep = skew_report(labels, parts)
+    assert min(rep["sizes"]) >= 8
+    # non-IID: at least one client heavily skewed
+    assert max(rep["max_class_frac"]) > 0.2
+
+
+# -- storage / escrow ---------------------------------------------------------------
+def test_blobstore_integrity(tmp_path):
+    store = BlobStore(str(tmp_path))
+    cid = store.put({"x": 1})
+    assert store.has(cid) and store.get(cid) == {"x": 1}
+
+
+def test_escrow_settlement_and_slash():
+    e = Escrow()
+    e.fund("tp", 100.0)
+    e.fund("t1", 5.0)
+    e.fund("t2", 5.0)
+    e.deposit("tp", "task", 10.0)
+    e.lock_collateral("t1", "task", 1.0)
+    e.lock_collateral("t2", "task", 1.0)
+    pay = e.settle("task", {"t1": 0.8, "t2": 0.0})
+    assert pay["t1"] == pytest.approx(10.0)
+    assert pay["t2"] == 0.0
+    assert e.slashed_pool == pytest.approx(1.0)      # t2's collateral
+    assert e.balances["t1"] == pytest.approx(4.0 + 10.0 + 1.0)
+    with pytest.raises(InsufficientFunds):
+        e.deposit("tp", "task2", 1e9)
+
+
+# -- fault tolerance -----------------------------------------------------------------
+def test_heartbeat_and_sweep():
+    reg = HeartbeatRegistry(suspect_after=1.0, dead_after=2.0)
+    reg.beat("a", now=0.0)
+    reg.beat("b", now=0.0)
+    assert reg.sweep(now=0.5) == []
+    reg.beat("a", now=1.5)
+    died = reg.sweep(now=2.5)
+    assert died == ["b"] and reg.alive() == ["a"]
+
+
+def test_round_deadline_straggler_cutoff():
+    rd = RoundDeadline(deadline_s=10.0, quorum_frac=2 / 3)
+    assert not rd.ready(5, 10, elapsed=5.0)
+    assert not rd.ready(5, 10, elapsed=11.0)       # below quorum
+    assert rd.ready(7, 10, elapsed=11.0)
+    assert rd.ready(10, 10, elapsed=0.1)           # all in -> go early
+    assert subset_aggregate_ok(7, 10) and not subset_aggregate_ok(5, 10)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4096))
+def test_factorize_mesh_valid(n):
+    pod, data, model = factorize_mesh(n)
+    assert pod * data * model == n
+    assert model <= 16
+
+
+def test_elastic_controller_remesh(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, {"w": np.ones(2, np.float32)})
+    reg = HeartbeatRegistry(dead_after=1.0)
+    for i in range(512):
+        reg.beat(f"n{i}", now=0.0)
+    ec = ElasticController(reg, ck)
+    mesh1 = ec.reconcile(now=0.5)
+    assert mesh1 is not None and np.prod(mesh1) == 512
+    # kill 256 nodes -> re-mesh + resume pointer recorded
+    for i in range(256):
+        reg.beat(f"n{i}", now=2.0)
+    mesh2 = ec.reconcile(now=2.5)
+    assert mesh2 is not None and np.prod(mesh2) == 256
+    assert ec.events[-1]["resume_step"] == 3
