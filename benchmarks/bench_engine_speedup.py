@@ -1,0 +1,74 @@
+"""Engine speedup benchmark: vectorized SoA engine vs object-based path.
+
+Methodology (recorded so BENCH_*.json entries stay comparable across PRs):
+  * Workload: Poisson steady-state, ``n_txs`` submitted transactions over a
+    fixed 20 s simulated window (rate = n_txs / 20), seed 0, default block
+    gas limit — i.e. the Fig. 4 configuration scaled up, chain saturated.
+  * Timed region: workload generation + submission + ``run_until`` over the
+    full window, for each engine on the SAME drawn arrival times.
+  * Metric: wall-clock ratio object/vector at equal ``n_txs`` (full mode
+    runs BOTH engines at n_txs = 1,000,000; quick mode shrinks both and the
+    ratio is reported as measured, never extrapolated).
+  * Correctness cross-check: both engines must report identical
+    confirmed/throughput/latency metrics before the ratio is accepted.
+
+Also sweeps the scenario workload catalog through the vector engine so each
+profile's cost appears in the BENCH record.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.ledger import simulate_load, simulate_workload
+from repro.core.workloads import SCENARIOS, make_workload
+
+FULL_N_TXS = 1_000_000
+# quick mode keeps the vector side >=10ms so the reported ratio is not
+# dominated by timer noise; the >=50x floor is only asserted in full mode
+QUICK_N_TXS = 200_000
+DURATION = 20.0
+
+
+def _timed_load(engine: str, n_txs: int) -> Dict:
+    rate = n_txs / DURATION
+    t0 = time.perf_counter()
+    m = simulate_load("submitLocalModel", rate, duration=DURATION,
+                      engine=engine)
+    m["wall_s"] = time.perf_counter() - t0
+    return m
+
+
+def run(quick: bool = False) -> Dict:
+    n_txs = QUICK_N_TXS if quick else FULL_N_TXS
+    vec = _timed_load("vector", n_txs)
+    obj = _timed_load("object", n_txs)
+    for k in ("confirmed", "submitted", "throughput"):
+        assert vec[k] == obj[k], (k, vec[k], obj[k])
+    assert abs(vec["latency"] - obj["latency"]) < 1e-9
+    speedup = obj["wall_s"] / vec["wall_s"]
+    if not quick:
+        assert speedup >= 50.0, \
+            f"vectorized engine must be >=50x at 1M txs, got {speedup:.1f}x"
+
+    scenarios = {}
+    s_rate = 200.0 if quick else 2000.0
+    for name in sorted(SCENARIOS):
+        wl = make_workload(name, s_rate, duration=10.0, seed=0)
+        t0 = time.perf_counter()
+        m = simulate_workload(wl)
+        scenarios[name] = {"submitted": m.get("submitted", 0),
+                           "confirmed": m.get("confirmed", 0),
+                           "throughput": round(m["throughput"], 1),
+                           "wall_s": round(time.perf_counter() - t0, 4)}
+    return {"n_txs": n_txs, "quick": quick,
+            "vector_wall_s": round(vec["wall_s"], 4),
+            "object_wall_s": round(obj["wall_s"], 4),
+            "speedup": round(speedup, 1),
+            "confirmed": vec["confirmed"],
+            "scenarios": scenarios}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -8,21 +8,31 @@ lower; latency rises sharply past saturation).
 from __future__ import annotations
 
 from repro.core.gas import FUNCTIONS
-from repro.core.ledger import simulate_load
+from repro.core.ledger import simulate_load, simulate_workload
+from repro.core.workloads import SCENARIOS, make_workload
 
 SEND_RATES = (20, 40, 80, 160, 320, 640)
 
 
-def run(duration: float = 20.0):
+def run(duration: float = 20.0, engine: str = "vector"):
     table = {}
     for fn in FUNCTIONS:
         rows = []
         for rate in SEND_RATES:
-            m = simulate_load(fn, rate, duration=duration)
+            m = simulate_load(fn, rate, duration=duration, engine=engine)
             rows.append({"send_rate": rate,
                          "throughput": round(m["throughput"], 1),
                          "latency_s": round(m["latency"], 3)})
         table[fn] = rows
+    # beyond-Fig.-4: the scenario catalog at one aggregate rate
+    scenario_rows = []
+    for name in sorted(SCENARIOS):
+        m = simulate_workload(make_workload(name, 160.0, duration=duration),
+                              engine=engine)
+        scenario_rows.append({"scenario": name,
+                              "submitted": m.get("submitted", 0),
+                              "throughput": round(m["throughput"], 1),
+                              "latency_s": round(m["latency"], 3)})
 
     sub = {r["send_rate"]: r for r in table["submitLocalModel"]}
     assert 160 <= sub[320]["throughput"] <= 200, \
@@ -33,7 +43,8 @@ def run(duration: float = 20.0):
     assert pub[320]["throughput"] < sub[320]["throughput"], \
         "heavier publishTask saturates below submitLocalModel"
     peak = max(r["throughput"] for r in table["submitLocalModel"])
-    return {"peak_tps_submitLocalModel": peak, "table": table}
+    return {"peak_tps_submitLocalModel": peak, "table": table,
+            "scenarios": scenario_rows}
 
 
 if __name__ == "__main__":

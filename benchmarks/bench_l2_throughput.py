@@ -11,10 +11,11 @@ from repro.core.gas import FUNCTIONS, ROLLUP_BATCH
 from repro.core.ledger import simulate_load
 
 
-def run(duration: float = 20.0):
+def run(duration: float = 20.0, engine: str = "vector"):
     rows = []
     for fn in FUNCTIONS:
-        peak = max(simulate_load(fn, rate, duration=duration)["throughput"]
+        peak = max(simulate_load(fn, rate, duration=duration,
+                                 engine=engine)["throughput"]
                    for rate in (160, 320, 640))
         l2 = ROLLUP_BATCH * peak
         rows.append({"fn": fn, "l1_peak_tps": round(peak, 1),

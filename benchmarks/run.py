@@ -1,12 +1,21 @@
-"""Benchmark driver — one entry per paper table/figure (+ roofline).
+"""Benchmark driver — one entry per paper table/figure (+ roofline, engine).
 
-Prints ``name,us_per_call,derived`` CSV:
+Prints ``name,us_per_call,derived`` CSV and writes the structured results to
+a BENCH JSON file (default ``benchmarks/BENCH.json``, override with
+``BENCH_JSON=path``) so CI can upload it as an artifact and entries stay
+comparable across PRs (see README "Benchmark methodology").
+
   * name        — paper artifact the benchmark reproduces
   * us_per_call — wall time of one benchmark unit (microseconds)
   * derived     — the headline metric(s) the paper reports
+
+``BENCH_QUICK=1`` runs a reduced smoke mode (CI): smaller tx counts, same
+assertions except the 1M-tx speedup floor (which needs the full run).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -18,40 +27,69 @@ def _timed(fn, *args, **kw):
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
-    from benchmarks import (bench_gas, bench_l1_throughput,
-                            bench_l2_throughput, bench_latency,
-                            bench_reputation, bench_roofline)
+    # invokable from anywhere: python benchmarks/run.py | python -m benchmarks.run
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (os.path.join(root, "src"), root):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from benchmarks import (bench_engine_speedup, bench_gas,
+                            bench_l1_throughput, bench_l2_throughput,
+                            bench_latency, bench_reputation, bench_roofline)
 
+    quick = os.environ.get("BENCH_QUICK", "") not in ("", "0", "false")
+    results = {}
     print("name,us_per_call,derived")
 
     out, us = _timed(bench_reputation.run)
+    results["fig3_reputation_dynamics"] = {"us_per_call": us, "out": out}
     print(f"fig3_reputation_dynamics,{us:.0f},"
           f"good={out['good_final']:.3f}|malicious={out['malicious_final']:.3f}"
           f"|lazy={out['lazy_final']:.3f}")
 
     out, us = _timed(bench_l1_throughput.run)
+    results["fig4_l1_throughput_latency"] = {"us_per_call": us, "out": out}
     print(f"fig4_l1_throughput_latency,{us:.0f},"
           f"peak_tps_submitLocalModel={out['peak_tps_submitLocalModel']:.0f}")
 
     out, us = _timed(bench_gas.run)
     n_rows = len(out["rows"])
+    results["table1_gas_l1_vs_l2"] = {"us_per_call": us / max(n_rows, 1),
+                                      "out": out}
     print(f"table1_gas_l1_vs_l2,{us / max(n_rows, 1):.0f},"
           f"max_gas_reduction={out['max_reduction']}x")
 
     out, us = _timed(bench_l2_throughput.run)
+    results["fig5_l2_vs_l1_throughput"] = {"us_per_call": us, "out": out}
     print(f"fig5_l2_vs_l1_throughput,{us:.0f},"
           f"avg_l2_tps={out['avg_l2_tps']:.0f}|best_l2_tps={out['best_l2_tps']:.0f}")
 
     out, us = _timed(bench_latency.run)
+    results["table2_l2_latency"] = {
+        "us_per_call": us / max(len(out["rows"]), 1), "out": out}
     print(f"table2_l2_latency,{us / max(len(out['rows']), 1):.0f},"
           f"worst_rel_err={out['worst_rel_err_n>=10']}")
 
+    out, us = _timed(bench_engine_speedup.run, quick=quick)
+    results["engine_vector_speedup"] = {"us_per_call": us, "out": out}
+    print(f"engine_vector_speedup,{us:.0f},"
+          f"speedup={out['speedup']}x|n_txs={out['n_txs']}"
+          f"|quick={int(out['quick'])}")
+
     out, us = _timed(bench_roofline.run)
     s = out["summary"]
+    results["roofline_dryrun_cells"] = {"us_per_call": us, "summary": s}
     print(f"roofline_dryrun_cells,{us:.0f},"
           f"ok={s['n_ok']}|err={s['n_error']}|skip={s['n_skipped']}"
           f"|dominant={s['dominant_histogram']}")
+
+    path = os.environ.get(
+        "BENCH_JSON",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "BENCH.json"))
+    with open(path, "w") as f:
+        json.dump({"quick": quick, "results": results}, f, indent=1,
+                  default=str)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,548 @@
+"""Vectorized L1/L2 transaction engine (structure-of-arrays hot path).
+
+The object-based simulator (core/ledger.py, core/rollup.py) processes every
+transaction as a Python ``Tx`` in a FIFO loop — faithful to the paper's
+Fig. 4 / Table I experiments but O(submitted txs) in Python bytecode.  This
+module re-implements the same discrete-event semantics over NumPy arrays so
+that one simulated block costs O(log n) (two ``searchsorted`` calls against
+precomputed running-max/cumsum arrays) instead of O(txs in block) Python
+iterations, and one rollup session costs a handful of vectorized passes.
+
+Semantics contract (enforced by tests/test_engine.py):
+
+  * ``VectorChain`` produces blocks with EXACTLY the same tx counts,
+    gas_used, confirm times and total gas as ``ledger.Chain`` on the same
+    workload — including the head-of-line FIFO rule: block packing walks
+    the mempool in submission order and stops at the first transaction
+    whose ``submit_time`` is in the future OR whose gas would overflow the
+    block, without skipping ahead.  A future-timestamped tx at the head of
+    an out-of-order mempool therefore stalls everything behind it (in both
+    engines); ``simulate_load``/``Workload`` guard against accidental skew
+    by always submitting in sorted time order.
+  * ``VectorRollup`` with ``n_lanes=1`` writes the same ``gas_log`` rows
+    (commit / amortized verify / execute per batch) as ``rollup.Rollup``.
+
+Digests: each seal folds the batch's transaction words through the same
+xor-mix used by the Pallas ``rollup_digest`` kernel.  On TPU the merged
+buffer is routed through the kernel itself; on CPU a bit-exact NumPy mirror
+(``xor_fold_digest``) is used (equality pinned by tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+
+# Mixing constants shared with kernels/rollup_digest.py and fl/round.py.
+DIGEST_MULT = np.uint32(0x85EBCA6B)
+DIGEST_SEED = np.uint32(0x9E3779B9)
+
+
+def xor_fold_digest(words: np.ndarray) -> int:
+    """Bit-exact NumPy mirror of kernels.rollup_digest (xor-mix fold).
+
+    ``rollup_digest`` pads to a block multiple with zeros; zero words mix to
+    zero and xor-fold away, so no explicit padding is needed here.
+    """
+    w = np.ascontiguousarray(words, dtype=np.uint32)
+    if w.size == 0:
+        return int(DIGEST_SEED)
+    mixed = (w ^ (w >> np.uint32(16))) * DIGEST_MULT
+    return int(DIGEST_SEED ^ np.bitwise_xor.reduce(mixed))
+
+
+def pallas_or_numpy_digest(words: np.ndarray, backend: str = "auto") -> int:
+    """Route the merged word buffer through the Pallas kernel (TPU) or the
+    NumPy mirror (CPU).  backend: "auto" | "pallas" | "numpy"."""
+    if backend == "numpy":
+        return xor_fold_digest(words)
+    if backend == "auto":
+        try:
+            import jax
+            use_pallas = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - jax always present in-tree
+            use_pallas = False
+        if not use_pallas:
+            return xor_fold_digest(words)
+    import jax.numpy as jnp
+    from repro.kernels.ops import rollup_digest
+    return int(rollup_digest(jnp.asarray(words, jnp.uint32)))
+
+
+class FnRegistry:
+    """Stable fn-name <-> integer-id mapping shared across SoA batches."""
+
+    def __init__(self, names: Sequence[str] = ()):
+        self.names: List[str] = []
+        self._ids: Dict[str, int] = {}
+        for n in names:
+            self.id(n)
+
+    def id(self, name: str) -> int:
+        i = self._ids.get(name)
+        if i is None:
+            i = len(self.names)
+            self._ids[name] = i
+            self.names.append(name)
+        return i
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+@dataclasses.dataclass
+class TxArrays:
+    """Structure-of-arrays transaction batch (the vector engine's Tx)."""
+
+    submit_time: np.ndarray          # float64 (N,)
+    gas: np.ndarray                  # int64   (N,)
+    fn_id: np.ndarray                # int32   (N,)
+    sender_id: np.ndarray            # int32   (N,)
+    fns: FnRegistry
+
+    def __post_init__(self):
+        self.submit_time = np.asarray(self.submit_time, np.float64)
+        self.gas = np.asarray(self.gas, np.int64)
+        self.fn_id = np.asarray(self.fn_id, np.int32)
+        self.sender_id = np.asarray(self.sender_id, np.int32)
+
+    def __len__(self) -> int:
+        return self.submit_time.shape[0]
+
+    @classmethod
+    def homogeneous(cls, fn: str, times: np.ndarray, gas: int,
+                    n_senders: int = 64,
+                    fns: Optional[FnRegistry] = None) -> "TxArrays":
+        """One function type at fixed per-call gas (the Fig. 4 workload)."""
+        fns = fns or FnRegistry()
+        n = len(times)
+        return cls(np.asarray(times, np.float64),
+                   np.full(n, gas, np.int64),
+                   np.full(n, fns.id(fn), np.int32),
+                   (np.arange(n) % max(1, n_senders)).astype(np.int32), fns)
+
+    @classmethod
+    def from_txs(cls, txs: Sequence[Any],
+                 fns: Optional[FnRegistry] = None) -> "TxArrays":
+        """Compatibility shim: lift object ``Tx`` lists into SoA form."""
+        fns = fns or FnRegistry()
+        senders: Dict[str, int] = {}
+        sid = np.empty(len(txs), np.int32)
+        fid = np.empty(len(txs), np.int32)
+        for i, t in enumerate(txs):
+            fid[i] = fns.id(t.fn)
+            sid[i] = senders.setdefault(t.sender, len(senders))
+        return cls(np.array([t.submit_time for t in txs], np.float64),
+                   np.array([t.gas for t in txs], np.int64), fid, sid, fns)
+
+    def word_buffer(self) -> np.ndarray:
+        """Interleaved u32 words (time bits, gas, fn, sender) for digests."""
+        n = len(self)
+        w = np.empty(4 * n, np.uint32)
+        w[0::4] = self.submit_time.astype(np.float32).view(np.uint32)
+        w[1::4] = (self.gas & 0xFFFFFFFF).astype(np.uint32)
+        w[2::4] = self.fn_id.astype(np.uint32)
+        w[3::4] = self.sender_id.astype(np.uint32)
+        return w
+
+
+@dataclasses.dataclass
+class BlockStats:
+    """Vector-engine block record (counts + gas, not per-tx objects)."""
+    height: int
+    time: float
+    n_txs: int
+    gas_used: int
+    start: int                 # [start, stop) tx index range in arrival order
+    stop: int
+    parent: str = ""
+    block_hash: str = ""
+
+    def __post_init__(self):
+        if not self.block_hash:
+            h = hashlib.sha256(
+                (self.parent + ":" + str(self.height) + ":" +
+                 str(self.start) + ":" + str(self.stop) + ":" +
+                 str(self.gas_used)).encode()).hexdigest()
+            self.block_hash = h[:16]
+
+
+class VectorChain:
+    """Vectorized mirror of ``ledger.Chain``: QBFT quorum, gas-limited FIFO
+    block packing over SoA arrays, O(log n) per block."""
+
+    def __init__(self, n_validators: int = 4, block_time: float = 1.0,
+                 block_gas_limit: int = 9_000_000,
+                 gas_table: GasTable = DEFAULT_GAS,
+                 fns: Optional[FnRegistry] = None):
+        assert n_validators >= 4, "QBFT needs >= 3f+1 with f >= 1"
+        self.n_validators = n_validators
+        self.block_time = block_time
+        self.block_gas_limit = block_gas_limit
+        self.gas_table = gas_table
+        self.fns = fns or FnRegistry()
+        self.blocks: List[BlockStats] = [BlockStats(0, 0.0, 0, 0, 0, 0,
+                                                    "genesis")]
+        self.state: Dict[str, Any] = {}
+        self.total_gas = 0
+        self._batch_handlers: Dict[int, Callable] = {}
+        self._sender_ids: Dict[str, int] = {}    # submit(tx) shim namespace
+        # consolidated mempool arrays (arrival order, never reordered).
+        # Geometric (doubling) capacity growth + incremental running-max /
+        # cumsum extension keep consolidation amortized O(new txs), so the
+        # O(log n)-per-block contract holds for interleaved submit/produce
+        # producers, not just submit-everything-then-run ones.
+        self._n = 0                              # filled prefix of buffers
+        self._t = np.empty(0, np.float64)
+        self._g = np.empty(0, np.int64)
+        self._f = np.empty(0, np.int32)
+        self._s = np.empty(0, np.int32)
+        self._confirm = np.empty(0, np.float64)
+        self._tmax = np.empty(0, np.float64)    # running max of _t
+        self._gcum = np.empty(0, np.int64)      # running cumsum of _g
+        self._ptr = 0                            # first unconfirmed index
+        self._staged: List[TxArrays] = []
+        self._staged_n = 0
+
+    # -- contract surface ------------------------------------------------------
+    def register_batch(self, fn: str, handler: Callable):
+        """Batched handler: handler(state, n_calls, tx_slice: TxArrays-view).
+        Called once per (block, fn) instead of once per tx."""
+        self._batch_handlers[self.fns.id(fn)] = handler
+
+    def submit_arrays(self, batch: TxArrays):
+        if batch.fns is not self.fns:
+            # remap fn ids into this chain's registry
+            remap = np.array([self.fns.id(n) for n in batch.fns.names],
+                             np.int32)
+            batch = TxArrays(batch.submit_time, batch.gas,
+                             remap[batch.fn_id] if len(batch) else
+                             batch.fn_id, batch.sender_id, self.fns)
+        self._staged.append(batch)
+        self._staged_n += len(batch)
+
+    def sender_id(self, sender: str) -> int:
+        """Stable sender-name -> id mapping for the object-Tx shim."""
+        return self._sender_ids.setdefault(sender, len(self._sender_ids))
+
+    def submit(self, tx):
+        """Object-Tx compatibility shim (small-N debugging)."""
+        batch = TxArrays.from_txs([tx], self.fns)
+        batch.sender_id = np.array([self.sender_id(tx.sender)], np.int32)
+        self.submit_arrays(batch)
+
+    def quorum(self, approvals: int) -> bool:
+        return 3 * approvals >= 2 * self.n_validators
+
+    def _grow(self, need: int):
+        cap = self._t.shape[0]
+        if self._n + need <= cap:
+            return
+        new_cap = max(1024, self._n + need, 2 * cap)
+
+        def grow(a, dtype):
+            out = np.empty(new_cap, dtype)
+            out[: self._n] = a[: self._n]
+            return out
+        self._t = grow(self._t, np.float64)
+        self._g = grow(self._g, np.int64)
+        self._f = grow(self._f, np.int32)
+        self._s = grow(self._s, np.int32)
+        self._confirm = grow(self._confirm, np.float64)
+        self._tmax = grow(self._tmax, np.float64)
+        self._gcum = grow(self._gcum, np.int64)
+
+    def _consolidate(self):
+        if not self._staged:
+            return
+        new, m = self._staged, self._staged_n
+        self._staged, self._staged_n = [], 0
+        self._grow(m)
+        lo, hi = self._n, self._n + m
+        at = lo
+        for b in new:
+            k = len(b)
+            self._t[at:at + k] = b.submit_time
+            self._g[at:at + k] = b.gas
+            self._f[at:at + k] = b.fn_id
+            self._s[at:at + k] = b.sender_id
+            at += k
+        self._confirm[lo:hi] = np.nan
+        # extend the running max (head-of-line eligibility) and gas cumsum
+        # (packing) over the new tail only — amortized O(new txs)
+        tmax_tail = np.maximum.accumulate(self._t[lo:hi])
+        if lo:
+            np.maximum(tmax_tail, self._tmax[lo - 1], out=tmax_tail)
+        self._tmax[lo:hi] = tmax_tail
+        self._gcum[lo:hi] = (np.cumsum(self._g[lo:hi])
+                             + (self._gcum[lo - 1] if lo else 0))
+        self._n = hi
+
+    # -- block production ------------------------------------------------------
+    def produce_block(self, now: float) -> BlockStats:
+        """Pack the next block at time ``now``.
+
+        FIFO head-of-line semantics (identical to ``Chain.produce_block``):
+        eligible txs are the longest mempool *prefix* whose running-max
+        submit_time is <= now — ``searchsorted`` on the precomputed running
+        max; the gas cap is then the longest prefix of that whose gas cumsum
+        fits the block limit — ``searchsorted`` on the gas cumsum.  A stuck
+        head tx (future-timestamped, or gas > block limit by itself) blocks
+        the queue in both engines; that is the documented intent.
+        """
+        self._consolidate()
+        ptr = self._ptr
+        hi = int(np.searchsorted(self._tmax[: self._n], now, side="right"))
+        hi = max(hi, ptr)
+        base = int(self._gcum[ptr - 1]) if ptr > 0 else 0
+        k = int(np.searchsorted(self._gcum[ptr:hi],
+                                base + self.block_gas_limit, side="right"))
+        stop = ptr + k
+        gas_used = (int(self._gcum[stop - 1]) - base) if stop > ptr else 0
+        if stop > ptr:
+            self._confirm[ptr:stop] = now
+            if self._batch_handlers:
+                counts = np.bincount(self._f[ptr:stop],
+                                     minlength=len(self.fns))
+                view = TxArrays(self._t[ptr:stop], self._g[ptr:stop],
+                                self._f[ptr:stop], self._s[ptr:stop],
+                                self.fns)
+                for fid, h in self._batch_handlers.items():
+                    if fid < counts.shape[0] and counts[fid]:
+                        h(self.state, int(counts[fid]), view)
+        assert self.quorum(self.n_validators - self.n_validators // 3)
+        blk = BlockStats(len(self.blocks), now, stop - ptr, gas_used,
+                         ptr, stop, self.blocks[-1].block_hash)
+        self.blocks.append(blk)
+        self.total_gas += gas_used
+        self._ptr = stop
+        return blk
+
+    def run_until(self, t_end: float):
+        t = self.blocks[-1].time
+        while t < t_end:
+            t += self.block_time
+            self.produce_block(t)
+
+    # -- metrics ---------------------------------------------------------------
+    @property
+    def n_confirmed(self) -> int:
+        return self._ptr
+
+    @property
+    def n_submitted(self) -> int:
+        return self._n + self._staged_n
+
+    def confirm_times(self) -> np.ndarray:
+        return self._confirm[: self._ptr]
+
+    def load_metrics(self, send_rate: float,
+                     duration: float) -> Dict[str, float]:
+        """Fig. 4 metrics, numerically identical to the object path."""
+        n_conf = self._ptr
+        if n_conf == 0:
+            return {"send_rate": send_rate, "throughput": 0.0, "latency": 0.0,
+                    "confirmed": 0, "submitted": self.n_submitted}
+        lat = float(np.mean(self._confirm[:n_conf] - self._t[:n_conf]))
+        return {"send_rate": send_rate,
+                "throughput": n_conf / duration,
+                "latency": lat,
+                "confirmed": n_conf,
+                "submitted": self.n_submitted}
+
+
+class VectorRollup:
+    """Vectorized mirror of ``rollup.Rollup`` with a multi-lane sequencer.
+
+    Transactions stripe round-robin across ``n_lanes`` lanes; each lane cuts
+    FIFO batches of ``batch_size`` which all seal concurrently (commit gas +
+    per-batch tx xor-roots computed in one vectorized pass), then ONE
+    amortized verify/execute settles the whole session — zkSync-style proof
+    aggregation, now across lanes as well as batches.  ``n_lanes=1``
+    reproduces ``Rollup``'s gas_log exactly (tests/test_engine.py).
+    """
+
+    def __init__(self, l1, batch_size: int = ROLLUP_BATCH,
+                 gas_table: GasTable = DEFAULT_GAS,
+                 prove_time: float = 0.9, per_tx_time: float = 0.14,
+                 n_lanes: int = 1, digest_backend: str = "auto"):
+        assert n_lanes >= 1
+        self.l1 = l1
+        self.batch_size = batch_size
+        self.gas_table = gas_table
+        self.prove_time = prove_time
+        self.per_tx_time = per_tx_time
+        self.n_lanes = n_lanes
+        self.digest_backend = digest_backend
+        # share the L1's registry when it has one (`or` would discard an
+        # empty-but-present registry: FnRegistry defines __len__)
+        l1_fns = getattr(l1, "fns", None)
+        self.fns: FnRegistry = l1_fns if l1_fns is not None else FnRegistry()
+        self._sender_ids: Dict[str, int] = {}
+        self.gas_log: List[Dict[str, Any]] = []
+        self.batch_digests: List[int] = []      # per-batch tx xor-roots
+        self.update_digest: int = int(DIGEST_SEED)  # merged-buffer digest
+        self.n_batches = 0
+        self._pending: List[TxArrays] = []
+        self._pending_n = 0
+        self._unsettled_rows: List[int] = []
+        self._last_time = 0.0
+
+    # -- sequencing ------------------------------------------------------------
+    def submit_arrays(self, batch: TxArrays):
+        if batch.fns is not self.fns:
+            remap = np.array([self.fns.id(n) for n in batch.fns.names],
+                             np.int32)
+            batch = TxArrays(batch.submit_time, batch.gas,
+                             remap[batch.fn_id] if len(batch) else
+                             batch.fn_id, batch.sender_id, self.fns)
+        self._pending.append(batch)
+        self._pending_n += len(batch)
+
+    def submit(self, tx):
+        """Object-Tx compatibility shim."""
+        batch = TxArrays.from_txs([tx], self.fns)
+        batch.sender_id = np.array(
+            [self._sender_ids.setdefault(tx.sender, len(self._sender_ids))],
+            np.int32)
+        self.submit_arrays(batch)
+
+    def _commit_gas_vectors(self):
+        from repro.core.gas import commit_gas_vectors
+        return commit_gas_vectors(self.fns.names, self.gas_table)
+
+    def seal(self) -> int:
+        """Seal every pending tx into lane batches; returns #batches sealed.
+
+        One vectorized pass computes, for all batches at once: per-batch
+        (fn -> count) histograms (commit gas), per-batch max submit_time
+        (the L1 commit timestamp), and per-batch xor-roots; the merged word
+        buffer of the whole seal is folded through the rollup_digest kernel
+        path (Pallas on TPU, bit-exact NumPy mirror on CPU).
+        """
+        if not self._pending:
+            return 0
+        txs = (self._pending[0] if len(self._pending) == 1 else
+               TxArrays(np.concatenate([b.submit_time for b in self._pending]),
+                        np.concatenate([b.gas for b in self._pending]),
+                        np.concatenate([b.fn_id for b in self._pending]),
+                        np.concatenate([b.sender_id for b in self._pending]),
+                        self.fns))
+        self._pending, self._pending_n = [], 0
+        n = len(txs)
+        idx = np.arange(n)
+        lane = idx % self.n_lanes
+        pos = idx // self.n_lanes                 # FIFO position within lane
+        batch_in_lane = pos // self.batch_size
+        # order (lane-major, FIFO within lane) so batches are contiguous
+        order = np.lexsort((pos, lane))
+        lane_o, bil_o = lane[order], batch_in_lane[order]
+        # compact global batch ids in (lane, batch_in_lane) order
+        seg_new = np.empty(n, bool)
+        seg_new[0] = True
+        seg_new[1:] = (lane_o[1:] != lane_o[:-1]) | (bil_o[1:] != bil_o[:-1])
+        batch_id = np.cumsum(seg_new) - 1
+        nb = int(batch_id[-1]) + 1
+        starts = np.flatnonzero(seg_new)
+
+        fn_o = txs.fn_id[order]
+        t_o = txs.submit_time[order]
+        counts = np.zeros((nb, len(self.fns)), np.int64)
+        np.add.at(counts, (batch_id, fn_o), 1)
+        base, percall = self._commit_gas_vectors()
+        commit = (counts > 0) @ base + counts @ percall
+        n_txs = counts.sum(axis=1)
+        now = np.maximum.reduceat(t_o, starts)
+        # per-batch xor-roots over the interleaved word buffer
+        words = TxArrays(t_o, txs.gas[order], fn_o, txs.sender_id[order],
+                         self.fns).word_buffer()
+        mixed = (words ^ (words >> np.uint32(16))) * DIGEST_MULT
+        roots = np.bitwise_xor.reduceat(mixed, starts * 4)
+        self.batch_digests.extend(int(DIGEST_SEED ^ r) for r in roots)
+        # merged update-buffer digest through the kernel path
+        self.update_digest = pallas_or_numpy_digest(words,
+                                                    self.digest_backend)
+
+        # L1 commits: one tx per batch, Table-I-calibrated gas.  Lanes can
+        # finish out of global time order; post commits time-sorted so the
+        # L1's FIFO head-of-line rule never stalls on a later lane's commit
+        # (stable sort -> no-op for n_lanes=1, preserving Rollup parity).
+        post = np.argsort(now, kind="stable")
+        commit_batch = TxArrays(
+            now[post].astype(np.float64), commit[post].astype(np.int64),
+            np.full(nb, self.fns.id("rollup_commit"), np.int32),
+            np.zeros(nb, np.int32), self.fns)
+        self._l1_submit(commit_batch)
+        first = self.n_batches
+        for j in range(nb):
+            self.gas_log.append({
+                "batch": first + j, "lane": int(lane_o[starts[j]]),
+                "n_txs": int(n_txs[j]), "commit": int(commit[j]),
+                "verify": 0, "execute": 0, "total": int(commit[j])})
+            self._unsettled_rows.append(len(self.gas_log) - 1)
+        self.n_batches += nb
+        self._last_time = float(now.max())
+        return nb
+
+    def _l1_submit(self, batch: TxArrays):
+        if hasattr(self.l1, "submit_arrays"):
+            self.l1.submit_arrays(batch)
+        else:                                   # object Chain fallback
+            from repro.core.ledger import Tx
+            for i in range(len(batch)):
+                self.l1.submit(Tx(batch.fns.names[batch.fn_id[i]],
+                                  "sequencer", {}, int(batch.gas[i]),
+                                  float(batch.submit_time[i])))
+
+    # -- settlement ------------------------------------------------------------
+    def flush(self):
+        self.seal()
+        self.settle_session()
+
+    def settle_session(self):
+        """One amortized verify + execute for every unsettled batch row
+        (across all lanes).  Amortization is tracked by explicit row
+        indices, so truncating ``gas_log`` between sessions cannot skew a
+        later session's rows (see Rollup._settle_session)."""
+        if not self._unsettled_rows:
+            return
+        rows = [self.gas_log[i] for i in self._unsettled_rows
+                if i < len(self.gas_log)]
+        # same predicate as Rollup._settle_session (session batch COUNT, not
+        # surviving rows) so both engines pick the same verify/execute gas
+        single = len(self._unsettled_rows) == 1 and \
+            (rows and rows[0]["n_txs"] <= 5)
+        verify = (self.gas_table.verify_single if single
+                  else self.gas_table.verify_multi)
+        execute = (self.gas_table.execute_single if single
+                   else self.gas_table.execute_multi)
+        settle = TxArrays(
+            np.full(2, self._last_time),
+            np.array([verify, execute], np.int64),
+            np.array([self.fns.id("rollup_verify"),
+                      self.fns.id("rollup_execute")], np.int32),
+            np.zeros(2, np.int32), self.fns)
+        self._l1_submit(settle)
+        n = max(1, len(self._unsettled_rows))
+        for row in rows:
+            row["verify"] = verify / n
+            row["execute"] = execute / n
+            row["total"] = row["commit"] + row["verify"] + row["execute"]
+        self._unsettled_rows = []
+
+    # -- metrics ---------------------------------------------------------------
+    def throughput(self, l1_tps: float) -> float:
+        """Paper's method, scaled by concurrent lanes."""
+        return self.n_lanes * self.batch_size * l1_tps
+
+    def latency(self, n_calls: int) -> float:
+        """Table-II latency model; lanes sequence concurrently, so the
+        session latency is the slowest lane's (ceil-split) share."""
+        import math
+        per_lane = math.ceil(n_calls / self.n_lanes)
+        nb = max(1, math.ceil(per_lane / self.batch_size))
+        return nb * self.prove_time + per_lane * self.per_tx_time

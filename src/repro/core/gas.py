@@ -94,3 +94,26 @@ def l2_gas(fn: str, n_calls: int, table: GasTable = DEFAULT_GAS) -> Dict[str, in
 
 def gas_reduction(fn: str, n_calls: int, table: GasTable = DEFAULT_GAS) -> float:
     return l1_gas(fn, n_calls, table) / l2_gas(fn, n_calls, table)["total"]
+
+
+# -- vectorized views (SoA engine, core/engine.py) ------------------------------
+L1_DEFAULT_GAS = 30_000          # unknown-fn fallback, matches fl/server.py
+COMMIT_BASE_DEFAULT = 37_000     # unknown-fn fallbacks, match Rollup._settle
+COMMIT_PER_CALL_DEFAULT = 500
+
+
+def l1_gas_vector(fn_names, table: GasTable = DEFAULT_GAS):
+    """Per-fn L1 gas as an int64 array indexable by engine fn_id."""
+    import numpy as np
+    return np.array([table.l1_per_call.get(n, L1_DEFAULT_GAS)
+                     for n in fn_names], np.int64)
+
+
+def commit_gas_vectors(fn_names, table: GasTable = DEFAULT_GAS):
+    """(commit_base, commit_per_call) int64 arrays indexable by fn_id."""
+    import numpy as np
+    base = np.array([table.commit_base.get(n, COMMIT_BASE_DEFAULT)
+                     for n in fn_names], np.int64)
+    percall = np.array([table.commit_per_call.get(n, COMMIT_PER_CALL_DEFAULT)
+                        for n in fn_names], np.int64)
+    return base, percall

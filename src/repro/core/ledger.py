@@ -123,6 +123,16 @@ class Chain:
 
     # -- block production ---------------------------------------------------------
     def produce_block(self, now: float) -> Block:
+        """Pack one block at time ``now``.
+
+        FIFO head-of-line semantics (intentional, mirrored bit-for-bit by
+        engine.VectorChain): the mempool is walked in *submission* order and
+        packing stops at the first tx whose ``submit_time`` is in the future
+        or whose gas would overflow the block — later txs are never skipped
+        ahead.  A future-timestamped tx submitted out of order therefore
+        stalls everything behind it; producers (simulate_load, Workload)
+        guard against that skew by submitting in sorted time order.
+        """
         txs, gas_used = [], 0
         while self.mempool:
             tx = self.mempool[0]
@@ -155,14 +165,32 @@ class Chain:
 def simulate_load(fn: str, send_rate: float, duration: float = 30.0,
                   gas_table: GasTable = DEFAULT_GAS, seed: int = 0,
                   block_time: float = 1.0,
-                  block_gas_limit: int = 9_000_000) -> Dict[str, float]:
-    """Fig. 4 experiment: constant send rate of one function type."""
+                  block_gas_limit: int = 9_000_000,
+                  engine: str = "vector") -> Dict[str, float]:
+    """Fig. 4 experiment: constant send rate of one function type.
+
+    ``engine="vector"`` (default) runs the SoA engine (engine.VectorChain);
+    ``engine="object"`` runs this module's per-Tx path.  Both draw the same
+    arrival times from the same rng stream and implement identical FIFO
+    packing semantics, so the metrics are numerically identical (pinned by
+    tests/test_engine.py); times are pre-sorted as the head-of-line guard
+    documented on ``Chain.produce_block``.
+    """
     rng = np.random.default_rng(seed)
-    chain = Chain(block_time=block_time, block_gas_limit=block_gas_limit,
-                  gas_table=gas_table)
     n = int(send_rate * duration)
     times = np.sort(rng.uniform(0.0, duration, n))
     gas = gas_table.l1_per_call[fn]
+    if engine == "vector":
+        from repro.core.engine import TxArrays, VectorChain
+        chain = VectorChain(block_time=block_time,
+                            block_gas_limit=block_gas_limit,
+                            gas_table=gas_table)
+        chain.submit_arrays(TxArrays.homogeneous(fn, times, gas))
+        chain.run_until(duration)
+        return chain.load_metrics(send_rate, duration)
+    assert engine == "object", f"unknown engine {engine!r}"
+    chain = Chain(block_time=block_time, block_gas_limit=block_gas_limit,
+                  gas_table=gas_table)
     for i, t in enumerate(times):
         chain.submit(Tx(fn, f"client{i % 64}", {}, gas, float(t)))
     # run long enough to drain what can be drained, then measure
@@ -170,8 +198,42 @@ def simulate_load(fn: str, send_rate: float, duration: float = 30.0,
     confirmed = [t for b in chain.blocks for t in b.txs
                  if t.confirm_time is not None]
     if not confirmed:
-        return {"send_rate": send_rate, "throughput": 0.0, "latency": 0.0}
+        return {"send_rate": send_rate, "throughput": 0.0, "latency": 0.0,
+                "confirmed": 0, "submitted": n}
     thr = len(confirmed) / duration
     lat = float(np.mean([t.confirm_time - t.submit_time for t in confirmed]))
     return {"send_rate": send_rate, "throughput": thr, "latency": lat,
             "confirmed": len(confirmed), "submitted": n}
+
+
+def simulate_workload(workload, block_time: float = 1.0,
+                      block_gas_limit: int = 9_000_000,
+                      gas_table: GasTable = DEFAULT_GAS,
+                      engine: str = "vector") -> Dict[str, float]:
+    """Run a workloads.Workload scenario through either engine and report
+    the Fig. 4-style throughput/latency metrics."""
+    duration = workload.duration
+    if engine == "vector":
+        from repro.core.engine import VectorChain
+        chain = VectorChain(block_time=block_time,
+                            block_gas_limit=block_gas_limit,
+                            gas_table=gas_table, fns=workload.txs.fns)
+        chain.submit_arrays(workload.txs)
+        chain.run_until(duration)
+        m = chain.load_metrics(len(workload) / max(duration, 1e-9), duration)
+    else:
+        assert engine == "object", f"unknown engine {engine!r}"
+        chain = Chain(block_time=block_time,
+                      block_gas_limit=block_gas_limit, gas_table=gas_table)
+        for t in workload.to_txs():
+            chain.submit(t)
+        chain.run_until(duration)
+        confirmed = [t for b in chain.blocks for t in b.txs
+                     if t.confirm_time is not None]
+        lat = (float(np.mean([t.confirm_time - t.submit_time
+                              for t in confirmed])) if confirmed else 0.0)
+        m = {"send_rate": len(workload) / max(duration, 1e-9),
+             "throughput": len(confirmed) / duration, "latency": lat,
+             "confirmed": len(confirmed), "submitted": len(workload)}
+    m["scenario"] = workload.name
+    return m

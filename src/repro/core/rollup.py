@@ -40,6 +40,10 @@ class BatchProof:
     pre_root: str
     post_root: str
     tx_root: str
+    # xor-mix fold over the batch's transaction words — same construction
+    # the Pallas rollup_digest kernel computes over merged update buffers
+    # (engine.xor_fold_digest is the bit-exact CPU mirror)
+    word_digest: int = 0
 
     def verify(self, pre_state: Dict[str, Any],
                replay: Callable[[Dict[str, Any]], Dict[str, Any]]) -> bool:
@@ -67,8 +71,16 @@ class Rollup:
         self.pending: List[Tx] = []
         self.batches: List[BatchProof] = []
         self.gas_log: List[Dict[str, Any]] = []
-        self._unsettled = 0
+        # indices into gas_log of batch rows committed but not yet settled;
+        # len(...) is the session's batch count (the old scalar counter
+        # mis-amortized when gas_log was truncated between sessions)
+        self._unsettled_rows: List[int] = []
+        self._sealing = False
         self._last_time = 0.0
+
+    @property
+    def _unsettled(self) -> int:
+        return len(self._unsettled_rows)
 
     def register(self, fn: str, handler: Callable):
         self._handlers[fn] = handler
@@ -87,22 +99,45 @@ class Rollup:
         return state
 
     def seal_batch(self) -> Optional[BatchProof]:
-        if not self.pending:
+        if not self.pending or self._sealing:
+            # re-entrancy guard: a handler that submits back into the rollup
+            # during _execute must not trigger a nested seal against a
+            # half-executed state; the queued txs seal on the next
+            # seal_batch/flush instead.
             return None
-        txs, self.pending = self.pending[: self.batch_size], \
-            self.pending[self.batch_size:]
-        pre_root = state_digest(self.state)
-        self.state = self._execute(self.state, txs)
-        post_root = state_digest(self.state)
-        tx_root = hashlib.sha256(
-            "".join(t.tx_id for t in txs).encode()).hexdigest()[:32]
-        proof = BatchProof(len(self.batches), len(txs), pre_root, post_root,
-                           tx_root)
-        self.batches.append(proof)
-        self._settle(proof, txs)
+        self._sealing = True
+        try:
+            txs, self.pending = self.pending[: self.batch_size], \
+                self.pending[self.batch_size:]
+            pre_root = state_digest(self.state)
+            self.state = self._execute(self.state, txs)
+            post_root = state_digest(self.state)
+            tx_root = hashlib.sha256(
+                "".join(t.tx_id for t in txs).encode()).hexdigest()[:32]
+            proof = BatchProof(len(self.batches), len(txs), pre_root,
+                               post_root, tx_root,
+                               word_digest=self._word_digest(txs))
+            self.batches.append(proof)
+            self._settle(proof, txs)
+        finally:
+            self._sealing = False
         return proof
 
+    @staticmethod
+    def _word_digest(txs: List[Tx]) -> int:
+        """Batched digest over the merged tx-word buffer — the same
+        xor-mix fold the Pallas rollup_digest kernel computes (see
+        engine.xor_fold_digest for the mirror pinned against the kernel)."""
+        from repro.core.engine import TxArrays, xor_fold_digest
+        return xor_fold_digest(TxArrays.from_txs(txs).word_buffer())
+
     def flush(self):
+        if self._sealing:
+            # re-entrant flush from a handler: the outer seal/flush in
+            # progress will drain pending and settle the session; settling
+            # here would split the session in two (double verify/execute)
+            # with the settlement timestamped before the outer commit.
+            return
         while self.pending:
             self.seal_batch()
         self._settle_session()
@@ -125,29 +160,34 @@ class Rollup:
         self.gas_log.append({"batch": proof.batch_id, "n_txs": proof.n_txs,
                              "commit": commit, "verify": 0, "execute": 0,
                              "total": commit})
-        self._unsettled += 1
+        self._unsettled_rows.append(len(self.gas_log) - 1)
         self._last_time = now
 
     def _settle_session(self):
-        if self._unsettled == 0:
+        if not self._unsettled_rows:
             return
-        single = self._unsettled == 1 and \
-            (self.gas_log and self.gas_log[-1]["n_txs"] <= 5)
+        # amortise over the rows committed THIS session, addressed by index:
+        # slicing gas_log[-n:] instead mis-attributed verify/execute to a
+        # previous session's rows whenever gas_log had been truncated (e.g.
+        # cleared to bound memory) and n exceeded what remained.
+        rows = [self.gas_log[i] for i in self._unsettled_rows
+                if i < len(self.gas_log)]
+        single = len(self._unsettled_rows) == 1 and \
+            (rows and rows[0]["n_txs"] <= 5)
         verify = (self.gas_table.verify_single if single
                   else self.gas_table.verify_multi)
         execute = (self.gas_table.execute_single if single
                    else self.gas_table.execute_multi)
         for phase, gas in (("verify", verify), ("execute", execute)):
             self.l1.submit(Tx(f"rollup_{phase}", "sequencer",
-                              {"batches": self._unsettled}, gas,
+                              {"batches": len(self._unsettled_rows)}, gas,
                               self._last_time))
-        # amortise the aggregated proof across the session's batch rows
-        n = self._unsettled
-        for row in self.gas_log[-n:]:
+        n = len(self._unsettled_rows)
+        for row in rows:
             row["verify"] = verify / n
             row["execute"] = execute / n
             row["total"] = row["commit"] + row["verify"] + row["execute"]
-        self._unsettled = 0
+        self._unsettled_rows = []
 
     # -- metrics ---------------------------------------------------------------
     def throughput(self, l1_tps: float) -> float:

@@ -113,3 +113,29 @@ class TaskContract:
     @staticmethod
     def handler_subj_rep(state: Dict[str, Any], tx: Tx):
         state.setdefault("s_rep", {})[tx.sender] = tx.payload.get("value", 0.0)
+
+    # batched adapters (vector engine, engine.VectorChain.register_batch):
+    # one call per (block, fn) updating aggregate counters from the SoA view
+    # instead of one Python call per tx.
+    @staticmethod
+    def batch_counter(fn: str):
+        """Handler counting confirmed calls of ``fn`` per fn and per sender."""
+        import numpy as np
+
+        def handler(state: Dict[str, Any], n: int, view) -> None:
+            calls = state.setdefault("calls", {})
+            calls[fn] = calls.get(fn, 0) + n
+            fid = view.fns.id(fn)
+            senders = view.sender_id[view.fn_id == fid]
+            per = state.setdefault("calls_by_sender", {}).setdefault(fn, {})
+            for sid, cnt in zip(*np.unique(senders, return_counts=True)):
+                per[int(sid)] = per.get(int(sid), 0) + int(cnt)
+        return handler
+
+    @classmethod
+    def register_batch_handlers(cls, chain, fns=None) -> None:
+        """Wire counting adapters for the Table-I functions (or ``fns``)
+        onto a VectorChain."""
+        from repro.core.gas import FUNCTIONS
+        for fn in (fns or FUNCTIONS):
+            chain.register_batch(fn, cls.batch_counter(fn))

@@ -68,12 +68,14 @@ def digest_tree(tree):
     (chunked mix + wraparound-sum fold — cheap, fused, order-deterministic;
     sum instead of xor because XLA:CPU cannot lower u32-xor reductions under
     SPMD — the Pallas kernel (kernels/rollup_digest.py) keeps the xor form
-    for TPU runs)."""
-    acc = jnp.uint32(0x9E3779B9)
+    for TPU runs).  Mixing constants are shared with the kernel and the
+    vector engine's CPU mirror (core/engine.py)."""
+    from repro.core.engine import DIGEST_MULT, DIGEST_SEED
+    acc = jnp.uint32(DIGEST_SEED)
     for leaf in jax.tree.leaves(tree):
         bits = jax.lax.bitcast_convert_type(
             leaf.astype(jnp.float32).reshape(-1), jnp.uint32)
-        mixed = jnp.bitwise_xor(bits, bits >> 16) * jnp.uint32(0x85EBCA6B)
+        mixed = jnp.bitwise_xor(bits, bits >> 16) * jnp.uint32(DIGEST_MULT)
         acc = acc + jnp.sum(mixed, dtype=jnp.uint32)
     return acc
 

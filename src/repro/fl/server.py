@@ -39,7 +39,8 @@ class AutoDFL:
                  eval_fn: Callable, val_batch,
                  rep_params: ReputationParams = ReputationParams(),
                  don: DONConfig = DONConfig(), use_rollup: bool = True,
-                 use_pallas_agg: bool = False, seed: int = 0):
+                 use_pallas_agg: bool = False, seed: int = 0,
+                 engine: str = "object"):
         self.model = model
         self.opt = opt
         self.eval_fn = eval_fn
@@ -53,8 +54,16 @@ class AutoDFL:
         self.acl = AccessControl(["admin0", "admin1", "admin2"])
         self.escrow = Escrow()
         self.tsc = TaskContract(self.acl, self.escrow, self.store)
-        self.chain = Chain()
-        self.rollup = Rollup(self.chain) if use_rollup else None
+        # engine="vector" swaps in the SoA hot path (core/engine.py); the
+        # object path stays the default for handler-rich small-N debugging.
+        if engine == "vector":
+            from repro.core.engine import VectorChain, VectorRollup
+            self.chain = VectorChain()
+            self.rollup = VectorRollup(self.chain) if use_rollup else None
+        else:
+            assert engine == "object", f"unknown engine {engine!r}"
+            self.chain = Chain()
+            self.rollup = Rollup(self.chain) if use_rollup else None
         self.book: TrainerBook = init_book(n_trainers)
         self.trainer_ids = [f"trainer{i}" for i in range(n_trainers)]
         for t in self.trainer_ids:

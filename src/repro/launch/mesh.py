@@ -8,19 +8,25 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int):
+    """jax.sharding.AxisType landed after 0.4.x; Auto is that jax's default
+    anyway, so older versions simply omit the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU smoke runs of the sharded code paths."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_type_kwargs(2))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

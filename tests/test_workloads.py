@@ -1,0 +1,90 @@
+"""Scenario workload generator tests: determinism, shape, catalog, and
+engine-path equivalence on every scenario."""
+import numpy as np
+import pytest
+
+from repro.core.gas import DEFAULT_GAS
+from repro.core.ledger import simulate_workload
+from repro.core.workloads import (SCENARIOS, TABLE_I_MIX,
+                                  adversarial_spam_workload,
+                                  bursty_workload, diurnal_workload,
+                                  make_workload, mixed_function_workload,
+                                  poisson_workload)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_seedable_and_sorted(name):
+    a = make_workload(name, 80.0, duration=12.0, seed=5)
+    b = make_workload(name, 80.0, duration=12.0, seed=5)
+    c = make_workload(name, 80.0, duration=12.0, seed=6)
+    np.testing.assert_array_equal(a.txs.submit_time, b.txs.submit_time)
+    np.testing.assert_array_equal(a.txs.fn_id, b.txs.fn_id)
+    assert len(a) != len(c) or \
+        not np.array_equal(a.txs.submit_time, c.txs.submit_time)
+    t = a.txs.submit_time
+    assert np.all(np.diff(t) >= 0), "head-of-line guard: sorted times"
+    assert t.size == 0 or (t[0] >= 0.0 and t[-1] <= a.duration)
+    assert a.name == name and a.duration == 12.0
+
+
+def test_poisson_rate_approximate():
+    wl = poisson_workload(500.0, duration=20.0, seed=0)
+    assert abs(len(wl) / 20.0 - 500.0) / 500.0 < 0.1
+
+
+def test_bursty_has_flash_crowd():
+    wl = bursty_workload(base_rate=50.0, burst_rate=500.0, duration=30.0,
+                         burst_start=10.0, burst_len=5.0, seed=1)
+    t = wl.txs.submit_time
+    in_burst = np.sum((t >= 10.0) & (t <= 15.0)) / 5.0
+    outside = np.sum(t < 10.0) / 10.0
+    assert in_burst > 5 * outside
+
+
+def test_diurnal_modulation():
+    wl = diurnal_workload(mean_rate=400.0, duration=40.0, period=40.0,
+                          depth=0.9, seed=2)
+    t = wl.txs.submit_time
+    # first half-period (sin > 0) must carry well more than the second
+    assert np.sum(t < 20.0) > 1.5 * np.sum(t >= 20.0)
+
+
+def test_mixed_function_fractions_match_table_i():
+    wl = mixed_function_workload(2000.0, duration=20.0, seed=3)
+    counts = np.bincount(wl.txs.fn_id, minlength=len(wl.txs.fns.names))
+    frac = counts / counts.sum()
+    for fn, want in TABLE_I_MIX.items():
+        got = frac[wl.txs.fns.id(fn)]
+        assert abs(got - want) < 0.05, (fn, got, want)
+    # gas drawn from the Table-I per-call calibration
+    fid = wl.txs.fns.id("publishTask")
+    assert np.all(wl.txs.gas[wl.txs.fn_id == fid]
+                  == DEFAULT_GAS.l1_per_call["publishTask"])
+
+
+def test_spam_confined_to_window_and_senders():
+    wl = adversarial_spam_workload(honest_rate=50.0, spam_rate=400.0,
+                                   duration=30.0, spam_start=5.0,
+                                   spam_len=10.0, n_spammers=4, seed=4)
+    spam_id = wl.txs.fns.id("calculateSubjectiveRep")
+    mask = wl.txs.fn_id == spam_id
+    assert mask.sum() > 1000
+    assert np.all(wl.txs.submit_time[mask] >= 5.0)
+    assert np.all(wl.txs.submit_time[mask] <= 15.0)
+    assert np.all(wl.txs.sender_id[mask] < 4)
+    assert np.all(wl.txs.sender_id[~mask] >= 4)
+
+
+def test_make_workload_unknown_scenario():
+    with pytest.raises(KeyError, match="catalog"):
+        make_workload("nope", 1.0)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_simulate_workload_engine_equivalence(name):
+    wl = make_workload(name, 60.0, duration=6.0, seed=9)
+    a = simulate_workload(wl, engine="vector")
+    b = simulate_workload(wl, engine="object")
+    for k in ("throughput", "latency", "confirmed", "submitted"):
+        assert np.isclose(a[k], b[k]), (name, k, a[k], b[k])
+    assert a["scenario"] == name
