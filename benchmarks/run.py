@@ -34,7 +34,8 @@ def main() -> None:
             sys.path.insert(0, p)
     from benchmarks import (bench_engine_speedup, bench_gas,
                             bench_l1_throughput, bench_l2_throughput,
-                            bench_latency, bench_reputation, bench_roofline)
+                            bench_latency, bench_protocol, bench_reputation,
+                            bench_roofline)
 
     quick = os.environ.get("BENCH_QUICK", "") not in ("", "0", "false")
     results = {}
@@ -74,6 +75,20 @@ def main() -> None:
     print(f"engine_vector_speedup,{us:.0f},"
           f"speedup={out['speedup']}x|n_txs={out['n_txs']}"
           f"|quick={int(out['quick'])}")
+
+    if not quick:
+        # quick/CI mode skips this one: the dedicated bench-protocol-smoke
+        # CI job already runs the reduced sweep (running it here too would
+        # duplicate the compute and double the timing-assert flake surface)
+        out, us = _timed(bench_protocol.run, quick=False)
+        results["protocol_multitask_scheduler"] = {"us_per_call": us,
+                                                   "out": out}
+        sch_point = out["scheduler_grid"][
+            "tasks={n_tasks},trainers={n_trainers}".format(
+                **out["assert_point"])]
+        print(f"protocol_multitask_scheduler,{us:.0f},"
+              f"speedup={out['speedup']}x|tps={sch_point['tps']}"
+              f"|gas_reduction={sch_point['gas_reduction']}x|quick=0")
 
     out, us = _timed(bench_roofline.run)
     s = out["summary"]

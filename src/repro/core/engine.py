@@ -403,12 +403,16 @@ class VectorRollup:
         self._pending.append(batch)
         self._pending_n += len(batch)
 
+    def sender_id(self, sender: str) -> int:
+        """Stable sender-name -> id mapping for this rollup's SoA stream
+        (same contract as VectorChain.sender_id; batched emitters must use
+        the TARGET's namespace so ids stay consistent within one stream)."""
+        return self._sender_ids.setdefault(sender, len(self._sender_ids))
+
     def submit(self, tx):
         """Object-Tx compatibility shim."""
         batch = TxArrays.from_txs([tx], self.fns)
-        batch.sender_id = np.array(
-            [self._sender_ids.setdefault(tx.sender, len(self._sender_ids))],
-            np.int32)
+        batch.sender_id = np.array([self.sender_id(tx.sender)], np.int32)
         self.submit_arrays(batch)
 
     def _commit_gas_vectors(self):

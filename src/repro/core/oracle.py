@@ -6,11 +6,19 @@ slice of the task publisher's validation set; the network aggregates by
 median (robust to a minority of bad-mouthing oracles) and flags outlier
 oracles for slashing.  The paper's 2/3-honest assumption maps to the quorum
 check.  The same quorum machinery cross-verifies the aggregated global model.
+
+Scoring is vectorized: the O(oracles x trainers) per-call Python loop is
+replaced by a batched pass — trainers stacked on a leading axis and scored
+with one vmapped ``eval_fn`` call per oracle slice (one double-vmapped call
+when the slices are equal-sized).  ``mode="loop"`` keeps the per-call path
+for eval_fns that cannot be vmapped; ``mode="auto"`` (default) falls back to
+it automatically.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,24 +43,158 @@ def split_validation(val_batch: Dict[str, jnp.ndarray], n_oracles: int):
     return out
 
 
-def evaluate_quorum(eval_fn: Callable, trainer_params: List,
-                    val_batch: Dict[str, jnp.ndarray],
+class ValidationSlices:
+    """Pre-split (and, when equal-sized, pre-stacked) per-oracle validation
+    slices.  Splitting per quorum call costs ~ms of eager slicing on CPU;
+    the scheduler round loop evaluates every round, so nodes build this
+    once and pass it as ``evaluate_quorum(..., slices=...)``."""
+
+    def __init__(self, val_batch, n_oracles: int):
+        self.slices = split_validation(val_batch, n_oracles)
+        sizes = {int(jax.tree.leaves(sl)[0].shape[0]) for sl in self.slices}
+        self.stacked = (jax.tree.map(lambda *xs: jnp.stack(xs), *self.slices)
+                        if len(sizes) == 1 else None)
+
+    def __len__(self) -> int:
+        return len(self.slices)
+
+
+def stack_trainer_params(trainer_params):
+    """Lift a list of per-trainer pytrees into one stacked tree (leading
+    axis = trainer); a tree that already carries the axis passes through.
+    Returns (stacked_tree, n_trainers)."""
+    if isinstance(trainer_params, (list, tuple)):
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trainer_params)
+        return stacked, len(trainer_params)
+    return trainer_params, int(jax.tree.leaves(trainer_params)[0].shape[0])
+
+
+_BATCHED_EVAL_CACHE: OrderedDict = OrderedDict()
+_BATCHED_EVAL_CACHE_SIZE = 32
+_UNBATCHABLE = object()          # cached verdict: eval_fn cannot be vmapped
+
+
+def _eval_cache_key(eval_fn: Callable):
+    """Bound methods are fresh objects on every attribute access — key on
+    (instance, underlying function) so repeated lookups hit.  Returns None
+    for unhashable callables (no caching)."""
+    key = eval_fn
+    if hasattr(eval_fn, "__func__") and hasattr(eval_fn, "__self__"):
+        key = (eval_fn.__self__, eval_fn.__func__)
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key
+
+
+def _eval_cache_get(key):
+    if key is None:
+        return None
+    hit = _BATCHED_EVAL_CACHE.get(key)
+    if hit is not None:
+        _BATCHED_EVAL_CACHE.move_to_end(key)
+    return hit
+
+
+def _eval_cache_put(key, value):
+    if key is None:
+        return
+    _BATCHED_EVAL_CACHE[key] = value
+    _BATCHED_EVAL_CACHE.move_to_end(key)
+    while len(_BATCHED_EVAL_CACHE) > _BATCHED_EVAL_CACHE_SIZE:
+        _BATCHED_EVAL_CACHE.popitem(last=False)
+
+
+def _batched_eval(eval_fn: Callable):
+    """Jitted (cohort-vmapped, oracle x cohort double-vmapped) forms of
+    ``eval_fn``, cached per eval_fn so repeated quorum rounds dispatch one
+    compiled program instead of re-tracing a fresh vmap every call.
+
+    The jitted wrappers close over eval_fn, so a weak-keyed cache would
+    never evict (the value resurrects its key); a small strong-ref LRU
+    evicts oldest-first at ``_BATCHED_EVAL_CACHE_SIZE`` entries instead."""
+    key = _eval_cache_key(eval_fn)
+    hit = _eval_cache_get(key)
+    if hit is not None and hit is not _UNBATCHABLE:
+        return hit
+    fns = (jax.jit(jax.vmap(eval_fn, in_axes=(0, None))),
+           jax.jit(jax.vmap(jax.vmap(eval_fn, in_axes=(0, None)),
+                            in_axes=(None, 0))))
+    if hit is not _UNBATCHABLE:
+        # don't clobber a memoized "not batchable" verdict (direct callers
+        # only — evaluate_quorum pops the verdict before a forced retry,
+        # so its rebuilt wrappers land in the cache via this put)
+        _eval_cache_put(key, fns)
+    return fns
+
+
+def _score_table_batched(eval_fn: Callable, stacked,
+                         val: ValidationSlices) -> np.ndarray:
+    """(n_oracles, n_trainers) score table via vmapped eval_fn calls."""
+    score_cohort, score_both = _batched_eval(eval_fn)
+    if val.stacked is not None:
+        # equal slices: one double-vmapped pass over (oracles, trainers)
+        table = score_both(stacked, val.stacked)
+    else:
+        table = jnp.stack([score_cohort(stacked, sl) for sl in val.slices])
+    return np.asarray(table, np.float64)
+
+
+def _score_table_loop(eval_fn: Callable, stacked, n_trainers: int,
+                      slices) -> np.ndarray:
+    """Legacy per-(oracle, trainer) Python loop (non-vmappable eval_fns)."""
+    table = np.zeros((len(slices), n_trainers), np.float64)
+    for o, sl in enumerate(slices):
+        for t in range(n_trainers):
+            params = jax.tree.map(lambda l: l[t], stacked)
+            table[o, t] = float(eval_fn(params, sl))
+    return table
+
+
+def evaluate_quorum(eval_fn: Callable, trainer_params,
+                    val_batch: Optional[Dict[str, jnp.ndarray]],
                     cfg: DONConfig = DONConfig(),
-                    adversarial_oracles: Optional[Dict[int, float]] = None):
+                    adversarial_oracles: Optional[Dict[int, float]] = None,
+                    mode: str = "auto",
+                    slices: Optional[ValidationSlices] = None):
     """Score every trainer's model with every oracle; aggregate by median.
 
     eval_fn(params, batch) -> scalar score in [0, 1] (e.g. accuracy).
+    trainer_params: list of per-trainer pytrees OR one stacked tree with a
+    leading trainer axis (the scheduler/cohort hot path).
     adversarial_oracles: {oracle_idx: forged_score} for bad-mouthing tests.
+    mode: "auto" | "batched" | "loop" (see module docstring).
+    slices: pre-built ValidationSlices (otherwise split from val_batch).
     Returns (scores (n_trainers,), report).
     """
-    slices = split_validation(val_batch, cfg.n_oracles)
-    table = np.zeros((cfg.n_oracles, len(trainer_params)), np.float64)
-    for o, sl in enumerate(slices):
-        for t, params in enumerate(trainer_params):
-            s = float(eval_fn(params, sl))
-            if adversarial_oracles and o in adversarial_oracles:
-                s = adversarial_oracles[o]
-            table[o, t] = s
+    val = slices or ValidationSlices(val_batch, cfg.n_oracles)
+    assert len(val) == cfg.n_oracles
+    stacked, n_trainers = stack_trainer_params(trainer_params)
+    table = None
+    key = _eval_cache_key(eval_fn)
+    if mode == "batched" and _eval_cache_get(key) is _UNBATCHABLE:
+        # forced retry: clear the stale verdict FIRST so the wrappers the
+        # attempt builds get cached (a later auto call reuses them)
+        _BATCHED_EVAL_CACHE.pop(key, None)
+    if mode == "batched" or (mode == "auto"
+                             and _eval_cache_get(key) is not _UNBATCHABLE):
+        try:
+            table = _score_table_batched(eval_fn, stacked, val)
+        except Exception:
+            if mode == "batched":
+                raise
+            # remember the verdict: "auto" must not pay a fresh vmap trace
+            # + swallowed exception on every later quorum round.  Trade-off
+            # (deliberate): a transient first-call failure also demotes the
+            # eval_fn for the process lifetime — force mode="batched" once
+            # to clear a stale verdict
+            _eval_cache_put(key, _UNBATCHABLE)
+    if table is None:
+        table = _score_table_loop(eval_fn, stacked, n_trainers, val.slices)
+    if adversarial_oracles:
+        for o, forged in adversarial_oracles.items():
+            table[o, :] = forged
 
     median = np.median(table, axis=0)                       # robust aggregate
     dev = np.abs(table - median[None, :]).mean(axis=1)      # per-oracle drift
@@ -67,10 +209,25 @@ def evaluate_quorum(eval_fn: Callable, trainer_params: List,
 
 
 def cross_verify_aggregate(agg_fn: Callable, stacked_params, scores,
-                           cfg: DONConfig = DONConfig(), rtol: float = 1e-4):
+                           cfg: DONConfig = DONConfig(), rtol: float = 1e-4,
+                           seed: int = 0):
     """Bad-mouthing guard on aggregation: n_oracles independently recompute
-    the Eq. 1 aggregate; accept iff a 2/3 quorum agrees elementwise."""
-    results = [agg_fn(stacked_params, scores) for _ in range(cfg.n_oracles)]
+    the Eq. 1 aggregate; accept iff a 2/3 quorum agrees elementwise.
+
+    Each oracle o >= 1 recomputes over a seeded permutation of the trainer
+    axis — algebraically the same aggregate, but a distinct floating-point
+    reduction path — so agreement is a meaningful integrity check on the
+    aggregation implementation rather than n identical replays of one
+    result (a dishonest/buggy ``agg_fn`` whose output depends on trainer
+    order or call history now loses the quorum)."""
+    scores = jnp.asarray(scores)
+    n = int(jax.tree.leaves(stacked_params)[0].shape[0])
+    results = []
+    for o in range(cfg.n_oracles):
+        perm = (np.arange(n) if o == 0
+                else np.random.default_rng(seed + o).permutation(n))
+        results.append(agg_fn(
+            jax.tree.map(lambda l: l[perm], stacked_params), scores[perm]))
     ref = results[0]
     agree = 0
     for r in results:

@@ -16,6 +16,7 @@ Symbols follow the paper:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -191,6 +192,40 @@ def end_of_task_update(book: TrainerBook,
     diag = {"o_rep": o_rep, "s_rep": s_rep, "l_rep": l_rep, "nd": nd,
             "belief": b, "disbelief": d, "uncertainty": u}
     return new_book, diag
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _multitask_scan(book, score_auto, rounds_completed, rounds_total,
+                    distances, participated, params):
+    def step(b, xs):
+        return end_of_task_update(b, *xs, params)
+    return jax.lax.scan(step, book, (score_auto, rounds_completed,
+                                     rounds_total, distances, participated))
+
+
+def end_of_multitask_update(book: TrainerBook,
+                            score_auto: jnp.ndarray,
+                            rounds_completed: jnp.ndarray,
+                            rounds_total: jnp.ndarray,
+                            distances: jnp.ndarray,
+                            participated: jnp.ndarray,
+                            params: ReputationParams = ReputationParams()):
+    """Fused settlement for K tasks closing in the same scheduler window.
+
+    All inputs are (K, n) — row k holds task k's cohort arrays, with
+    ``participated[k]`` masking that task's trainers (rows may overlap: a
+    trainer can close several tasks in one window).  Applies the K Eq. 2-10
+    updates in row order as ONE jitted ``lax.scan`` — identical results to K
+    sequential ``end_of_task_update`` calls (pinned by tests), but a single
+    dispatch per settlement window instead of per task.
+
+    Returns (new_book, diagnostics) with diagnostic leaves stacked (K, n).
+    """
+    xs = tuple(jnp.asarray(a, jnp.float32) for a in
+               (score_auto, rounds_completed, rounds_total, distances,
+                participated))
+    assert xs[0].ndim == 2, "multitask inputs are (K, n)"
+    return _multitask_scan(book, *xs, params)
 
 
 def init_book(n: int, history: int = 16,

@@ -6,6 +6,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
 from repro.core.escrow import Escrow
 from repro.core.ledger import AccessControl, Tx
 from repro.core.storage import BlobStore
@@ -52,14 +54,31 @@ class TaskContract:
         return task
 
     # trainer selection (reputation-ranked, on-chain) -----------------------------
-    def select_trainers(self, task_id: str, reputations: Dict[str, float],
-                        n_select: int, min_rep: float = 0.0) -> List[str]:
+    def select_trainers(self, task_id: str, reputations,
+                        n_select: int, min_rep: float = 0.0,
+                        trainer_ids: Optional[List[str]] = None) -> List[str]:
+        """Rank trainers by reputation; ties break by stable trainer index
+        (dict insertion / array position), never by id-string order.
+
+        ``reputations`` is either {trainer_id: rep} or an array aligned with
+        ``trainer_ids`` — the array form is the scheduler hot path (the
+        reputation book is already a vector; no dict roundtrip).
+        """
         task = self.tasks[task_id]
         assert task.state == "selection"
-        eligible = [(r, t) for t, r in reputations.items()
-                    if self.acl.has_role(t, "trainer") and r >= min_rep]
-        eligible.sort(reverse=True)
-        task.trainers = [t for _, t in eligible[:n_select]]
+        if isinstance(reputations, dict):
+            assert trainer_ids is None, "trainer_ids implied by the dict"
+            trainer_ids = list(reputations)
+            reps = np.asarray(list(reputations.values()), np.float64)
+        else:
+            reps = np.asarray(reputations, np.float64)
+            assert trainer_ids is not None and len(trainer_ids) == len(reps)
+        ok = np.array([self.acl.has_role(t, "trainer")
+                       for t in trainer_ids], bool) & (reps >= min_rep)
+        idx = np.flatnonzero(ok)
+        # stable sort on -rep: equal reputations keep ascending index order
+        order = idx[np.argsort(-reps[idx], kind="stable")]
+        task.trainers = [trainer_ids[i] for i in order[:n_select]]
         task.state = "training"
         return task.trainers
 
@@ -120,7 +139,6 @@ class TaskContract:
     @staticmethod
     def batch_counter(fn: str):
         """Handler counting confirmed calls of ``fn`` per fn and per sender."""
-        import numpy as np
 
         def handler(state: Dict[str, Any], n: int, view) -> None:
             calls = state.setdefault("calls", {})

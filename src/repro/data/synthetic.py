@@ -22,6 +22,24 @@ def token_batches(vocab_size: int, batch: int, seq: int, seed: int = 0
                "labels": toks[:, 1:].astype(np.int32)}
 
 
+def gaussian_clusters(n: int, d: int = 64, n_classes: int = 10,
+                      seed: int = 0, centers_seed: int = 0,
+                      noise: float = 0.7) -> Tuple[np.ndarray, np.ndarray]:
+    """Feature-vector classification data: one gaussian blob per class.
+
+    Learnable by a tiny MLP within a handful of steps — the workload of the
+    protocol-layer benchmark and scheduler tests, where FL compute must not
+    mask protocol costs.  ``centers_seed`` fixes the class geometry so
+    train/val splits drawn with different ``seed``s share it.
+    """
+    centers = np.random.default_rng(centers_seed).normal(
+        0.0, 1.0, (n_classes, d)).astype(np.float32)
+    g = np.random.default_rng(seed)
+    labels = g.integers(0, n_classes, n).astype(np.int32)
+    xs = centers[labels] + g.normal(0.0, noise, (n, d)).astype(np.float32)
+    return xs.astype(np.float32), labels
+
+
 def make_mnist_like(n: int = 4096, seed: int = 0,
                     image_size: int = 32) -> Tuple[np.ndarray, np.ndarray]:
     """10-class 'digit' dataset: class-dependent stroke patterns + noise.

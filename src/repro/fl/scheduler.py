@@ -1,0 +1,293 @@
+"""Multi-task protocol scheduler: N concurrent FL tasks on one shared clock,
+ledger and reputation book.
+
+``AutoDFL.run_task`` (fl/server.py) used to be a monolithic loop; it is now
+split into
+
+  * ``TaskRuntime`` — the per-task state machine (paper Fig. 1 steps 1-16):
+    select -> [train -> evaluate -> aggregate] x rounds -> settle.  Each
+    ``step()`` advances one phase, so a scheduler can interleave many tasks
+    at round granularity.
+  * ``Scheduler`` — drives N TaskRuntimes on a shared window clock.  Every
+    window, each active task steps once; all lifecycle/reputation
+    transactions land in the node's ONE shared chain/rollup (the paper's
+    congestion scenario), optionally racing a background ``Workload``
+    (core/workloads.py) for block gas.  Tasks that finish in the same
+    window settle TOGETHER through the fused multi-task reputation update
+    (core/reputation.end_of_multitask_update) — one dispatch per window.
+
+Single-task equivalence: a ``Scheduler`` with one task reproduces
+``AutoDFL.run_task`` outputs exactly (tests/test_scheduler.py) — run_task
+itself drives a TaskRuntime sequentially, and gas totals are invariant to
+block/window timing.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import (tree_flat, tree_flat_stacked,
+                                    weighted_average_tree_jit)
+from repro.core.oracle import evaluate_quorum
+from repro.core.reputation import model_distances
+from repro.fl.cohort import AgentCohort, CohortSubmissions
+
+
+@jax.jit
+def _settle_distances(stacked_tree, global_tree):
+    """Batched Eq. 4 distance pass for the final submissions (one fused
+    dispatch per task at settlement)."""
+    return model_distances(tree_flat_stacked(stacked_tree),
+                           tree_flat(global_tree))
+
+
+class TaskRuntime:
+    """Per-task state machine over a shared protocol node (AutoDFL).
+
+    Phases: "select" -> "round" (x rounds) -> "settle_ready" -> "done".
+    ``step()`` advances one phase; settlement is performed by the node
+    (``AutoDFL.settle_window``) so that tasks closing in the same scheduler
+    window share one fused reputation update.
+    """
+
+    def __init__(self, node, task_id: str, cohort, *, rounds: int = 5,
+                 reward: float = 10.0, n_select: Optional[int] = None,
+                 init_seed: int = 0):
+        if isinstance(cohort, (list, tuple)):
+            cohort = AgentCohort(cohort)
+        assert len(cohort) == len(node.trainer_ids), \
+            "cohort must cover the node's trainer set"
+        self.node = node
+        self.task_id = task_id
+        self.cohort = cohort
+        self.rounds = rounds
+        self.reward = reward
+        self.n_select = n_select
+        self.init_seed = init_seed
+        self.phase = "select"
+        self.rnd = 0
+        self.start_window = 0
+        n = len(cohort)
+        self.completed = np.zeros(n, np.float32)
+        self.sel_idx: List[int] = []
+        self.params = None
+        self.last_subs: Optional[CohortSubmissions] = None
+        self.last_scores: Optional[np.ndarray] = None
+        # settlement arrays, filled by _finalize
+        self.score_auto = np.zeros(n, np.float32)
+        self.dists = np.zeros(n, np.float32)
+        self.participated = np.zeros(n, np.float32)
+        self.result = None
+
+    # -- lifecycle -------------------------------------------------------------
+    def step(self):
+        if self.phase == "select":
+            self._select()
+            self.phase = "round"
+            if self.rounds == 0:
+                self._finalize()
+        elif self.phase == "round":
+            self._round()
+            if self.rnd >= self.rounds:
+                self._finalize()
+        else:
+            raise RuntimeError(f"step() in phase {self.phase!r} "
+                               f"(task {self.task_id})")
+
+    # steps 1-2: publish + reputation-ranked selection --------------------------
+    def _select(self):
+        node = self.node
+        model_cid = node.store.put({"arch": node.model.cfg.name})
+        node.tsc.publish_task(node.publisher, self.task_id, model_cid,
+                              model_cid, self.rounds, 0.5, self.reward)
+        node._tx("publishTask", node.publisher, {"taskId": self.task_id})
+        # array reputations straight from the book — no dict roundtrip
+        selected = node.tsc.select_trainers(
+            self.task_id, np.asarray(node.book.reputation),
+            self.n_select or len(self.cohort), trainer_ids=node.trainer_ids)
+        self.sel_idx = [node.trainer_index(t) for t in selected]
+        for t in selected:
+            node.escrow.lock_collateral(t, self.task_id, 1.0)
+        self.params = node.model.init_params(jax.random.key(self.init_seed))
+        self.cohort.start_task(self.params, node.opt, self.sel_idx)
+
+    # steps 3-15: one round (local training -> DON -> Eq. 1 merge) --------------
+    def _round(self):
+        node = self.node
+        subs = self.cohort.train(self.params, self.rnd, self.sel_idx)
+        self.rnd += 1
+        if subs is None:
+            node.tsc.advance_round(self.task_id)
+            return
+        senders = []
+        for i in subs.idxs:
+            tid = node.trainer_ids[i]
+            node.tsc.submit_local_model(tid, self.task_id, self.rnd - 1,
+                                        subs.cids[i])
+            senders.append(tid)
+        node._tx_batch("submitLocalModel", senders,
+                       lambda: [{"taskId": self.task_id,
+                                 "round": self.rnd - 1, "cid": subs.cids[i]}
+                                for i in subs.idxs])
+        self.completed[subs.idxs] += 1.0
+        scores, _report = evaluate_quorum(node.eval_fn, subs.stacked, None,
+                                          node.don, slices=node.val_slices)
+        scores_np = np.asarray(scores, np.float32)
+        node._tx_batch("calculateObjectiveRep", senders,
+                       lambda: [{"value": float(s)} for s in scores_np])
+        self.params = weighted_average_tree_jit(subs.stacked, scores,
+                                                use_pallas=node.use_pallas_agg)
+        node.tsc.advance_round(self.task_id)
+        self.last_subs = subs
+        self.last_scores = scores_np
+
+    # step 16 prep: cohort settlement arrays ------------------------------------
+    def _finalize(self):
+        """Distances + final scores for the end-of-task update.
+
+        Final scores REUSE the last round's DON quorum medians instead of
+        re-evaluating every final model (that double work was pure overlap
+        with the round-loop quorum).  Distances are computed for submitters
+        first in one batched Eq. 4 pass; every selected non-submitter then
+        gets the max over SUBMITTED distances (the old in-loop fallback read
+        a partially-filled array, so the penalty depended on iteration
+        order)."""
+        self.participated[self.sel_idx] = 1.0
+        d = np.zeros(0, np.float32)
+        if self.last_subs is not None:
+            d = np.asarray(_settle_distances(self.last_subs.stacked,
+                                             self.params), np.float32)
+            self.dists[self.last_subs.idxs] = d
+            self.score_auto[self.last_subs.idxs] = self.last_scores
+        # degenerate case (no submitters, or every submitted distance is
+        # exactly 0, e.g. a single submitter whose model IS the merge):
+        # keep the legacy 1.0 penalty so free-riders never score best
+        fallback = float(d.max()) if d.size and float(d.max()) > 0 else 1.0
+        submitted = set(self.last_subs.idxs) if self.last_subs else set()
+        for i in self.sel_idx:
+            if i not in submitted:
+                self.dists[i] = fallback
+        self.phase = "settle_ready"
+
+
+class Scheduler:
+    """Interleave N TaskRuntimes on a shared window clock.
+
+    window: simulated seconds per scheduling window; every active task
+    advances one phase per window and the L1 produces blocks up to the
+    window edge.  ``background`` (a core/workloads.py Workload) is injected
+    into the shared L1 in time order, racing protocol traffic for block gas.
+    ``seal_every``: seal rollup lane batches every k windows (0 = only the
+    final flush, which preserves single-task batch-boundary equivalence
+    with ``run_task``).
+    """
+
+    def __init__(self, node, *, window: float = 1.0, seal_every: int = 0,
+                 background=None):
+        self.node = node
+        self.window = window
+        self.seal_every = seal_every
+        self.background = background
+        self.runtimes: List[TaskRuntime] = []
+        self._bg_pos = 0
+
+    def add_task(self, task_id: str, cohort, *, rounds: int = 5,
+                 reward: float = 10.0, n_select: Optional[int] = None,
+                 start_window: int = 0, init_seed: int = 0) -> TaskRuntime:
+        rt = TaskRuntime(self.node, task_id, cohort, rounds=rounds,
+                         reward=reward, n_select=n_select,
+                         init_seed=init_seed)
+        rt.start_window = start_window
+        self.runtimes.append(rt)
+        return rt
+
+    def _seal_rollup(self):
+        """Seal every pending rollup tx on either engine: VectorRollup
+        seals all lanes in one ``seal()``; the object ``Rollup`` only
+        exposes per-batch ``seal_batch()``, so drain it."""
+        r = self.node.rollup
+        if hasattr(r, "seal"):
+            r.seal()
+        else:
+            while r.pending:
+                if r.seal_batch() is None:
+                    break
+
+    def _submit_background(self, t_end: float):
+        if self.background is None:
+            return
+        txs = self.background.txs
+        i = self._bg_pos
+        j = int(np.searchsorted(txs.submit_time, t_end, side="left"))
+        if j <= i:
+            return
+        chain = self.node.chain
+        if hasattr(chain, "submit_arrays"):
+            from repro.core.engine import TxArrays
+            # remap raw workload sender ids into the chain's namespace
+            # (the same "client<k>" actors the object engine sees) — raw
+            # ids would collide with protocol senders registered via
+            # chain.sender_id()
+            sid = txs.sender_id[i:j]
+            uniq = np.unique(sid)
+            lut = np.array([chain.sender_id(f"client{int(u)}")
+                            for u in uniq], np.int32)
+            chain.submit_arrays(TxArrays(
+                txs.submit_time[i:j], txs.gas[i:j], txs.fn_id[i:j],
+                lut[np.searchsorted(uniq, sid)], txs.fns))
+        else:
+            from repro.core.ledger import Tx
+            for k in range(i, j):
+                chain.submit(Tx(txs.fns.names[txs.fn_id[k]],
+                                f"client{int(txs.sender_id[k])}", {},
+                                int(txs.gas[k]), float(txs.submit_time[k])))
+        self._bg_pos = j
+
+    def run(self) -> Dict[str, object]:
+        """Drive every task to completion; returns {task_id: FLTaskResult}."""
+        node = self.node
+        # keep the shared mempool time-sorted: before every protocol
+        # emission, background txs stamped earlier than the clock are
+        # drained in (both engines pack FIFO and head-of-line-stall on
+        # out-of-order future stamps — see Chain.produce_block)
+        node.pre_tx_hook = self._submit_background
+        w = 0
+        t = 0.0
+        try:
+            while any(rt.phase != "done" for rt in self.runtimes):
+                # the window END tracks the protocol clock: emitting n txs
+                # advances the clock by 0.01*n, and a window edge behind
+                # the clock would strand late-stamped protocol txs across
+                # block boundaries
+                node._clock = max(node._clock, t)
+                ready = []
+                for rt in self.runtimes:
+                    if rt.phase in ("settle_ready", "done") or \
+                            rt.start_window > w:
+                        continue
+                    rt.step()
+                    if rt.phase == "settle_ready":
+                        ready.append(rt)
+                if ready:
+                    node.settle_window(ready)
+                if self.seal_every and node.rollup is not None and \
+                        (w + 1) % self.seal_every == 0:
+                    self._seal_rollup()
+                t_end = max(t + self.window, node._clock)
+                self._submit_background(t_end)
+                node.chain.run_until(t_end)
+                t = t_end
+                w += 1
+                assert w < 1_000_000, "scheduler failed to make progress"
+            self._submit_background(float("inf"))
+            if node.rollup is not None:
+                node.rollup.flush()
+            t_end = node._clock + 5.0
+            if self.background is not None:
+                t_end = max(t_end, self.background.duration + 5.0)
+            node.chain.run_until(t_end)
+        finally:
+            node.pre_tx_hook = None
+        return {rt.task_id: rt.result for rt in self.runtimes}

@@ -1,26 +1,29 @@
-"""Decentralized FL round orchestration: tasks + trainers + DON + reputation
+"""Decentralized FL protocol node: tasks + trainers + DON + reputation
 + escrow + rollup, wired together (the full paper workflow, steps 1-16 of
 Fig. 1).  No central server: the 'orchestrator' here is the protocol state
-machine every node can replay from the ledger."""
+machine every node can replay from the ledger.
+
+``AutoDFL`` owns the SHARED protocol state (chain/rollup, escrow, blob
+store, reputation book, clock); the per-task round logic lives in
+``fl/scheduler.TaskRuntime``.  ``run_task`` drives one TaskRuntime to
+completion sequentially; ``fl/scheduler.Scheduler`` interleaves many on the
+same node — the paper's multi-task congestion scenario."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import weighted_average_tree
 from repro.core.escrow import Escrow
+from repro.core.gas import DEFAULT_GAS
 from repro.core.ledger import AccessControl, Chain, Tx
-from repro.core.oracle import DONConfig, evaluate_quorum
+from repro.core.oracle import DONConfig, ValidationSlices
 from repro.core.reputation import (ReputationParams, TrainerBook,
-                                   end_of_task_update, init_book)
+                                   end_of_multitask_update, init_book)
 from repro.core.rollup import Rollup
 from repro.core.storage import BlobStore
 from repro.core.tasks import TaskContract
-from repro.core.gas import DEFAULT_GAS
 
 
 @dataclasses.dataclass
@@ -40,13 +43,15 @@ class AutoDFL:
                  rep_params: ReputationParams = ReputationParams(),
                  don: DONConfig = DONConfig(), use_rollup: bool = True,
                  use_pallas_agg: bool = False, seed: int = 0,
-                 engine: str = "object"):
+                 engine: str = "object", trainer_funds: float = 10.0,
+                 publisher_funds: float = 1000.0):
         self.model = model
         self.opt = opt
         self.eval_fn = eval_fn
         self.val_batch = val_batch
         self.rep_params = rep_params
         self.don = don
+        self.val_slices = ValidationSlices(val_batch, don.n_oracles)
         self.use_rollup = use_rollup
         self.use_pallas_agg = use_pallas_agg
 
@@ -66,112 +71,112 @@ class AutoDFL:
             self.rollup = Rollup(self.chain) if use_rollup else None
         self.book: TrainerBook = init_book(n_trainers)
         self.trainer_ids = [f"trainer{i}" for i in range(n_trainers)]
+        self._trainer_idx = {t: i for i, t in enumerate(self.trainer_ids)}
         for t in self.trainer_ids:
             self.acl.grant("admin0", t, "trainer")
-            self.escrow.fund(t, 10.0)
-        self.acl.grant("admin0", "tp0", "task_publisher")
-        self.escrow.fund("tp0", 1000.0)
+            self.escrow.fund(t, trainer_funds)
+        self.publisher = "tp0"
+        self.acl.grant("admin0", self.publisher, "task_publisher")
+        self.escrow.fund(self.publisher, publisher_funds)
         self._clock = 0.0
+        # protocol traffic accounting (the bench_protocol TPS numerator)
+        self.protocol_calls: Dict[str, int] = {}
+        # invoked with the current clock before every protocol emission;
+        # the Scheduler uses it to drain background traffic in time order
+        # (both engines pack FIFO and stall on out-of-order future stamps)
+        self.pre_tx_hook: Optional[Callable[[float], None]] = None
+
+    def trainer_index(self, trainer_id: str) -> int:
+        return self._trainer_idx[trainer_id]
 
     # -- ledger helpers -----------------------------------------------------------
-    def _tx(self, fn: str, sender: str, payload: Dict):
-        self._clock += 0.01
-        gas = DEFAULT_GAS.l1_per_call.get(fn, 30000)
-        tx = Tx(fn, sender, payload, gas, self._clock)
-        if self.rollup is not None:
-            self.rollup.submit(tx)
-        else:
-            self.chain.submit(tx)
+    def _target(self):
+        return self.rollup if self.rollup is not None else self.chain
 
-    # -- one full task (steps 1-16 of Fig. 1) -------------------------------------
-    def run_task(self, task_id: str, agents, batch_fn, rounds: int = 5,
+    def _tx(self, fn: str, sender: str, payload: Dict):
+        self._tx_batch(fn, [sender], [payload])
+
+    def _tx_batch(self, fn: str, senders: Sequence[str], payloads=None):
+        """Emit one protocol tx per sender (clock-stamped 0.01s apart, same
+        as sequential ``_tx`` calls) — one SoA append on the vector engine
+        instead of a per-tx Python object.  ``payloads``: a list of dicts
+        or a zero-arg callable producing one (only materialized on the
+        object path; the SoA engine drops payloads by design)."""
+        n = len(senders)
+        if n == 0:
+            return
+        if self.pre_tx_hook is not None:
+            self.pre_tx_hook(self._clock)
+        target = self._target()
+        gas = DEFAULT_GAS.l1_per_call.get(fn, 30000)
+        times = self._clock + 0.01 * np.arange(1, n + 1)
+        self._clock += 0.01 * n
+        if hasattr(target, "submit_arrays"):
+            from repro.core.engine import TxArrays
+            # ids MUST come from the target's own namespace: _tx's submit
+            # shim registers senders there, and mixing the chain's counter
+            # into the rollup's stream would collide/misattribute ids
+            sender_ids = np.array(
+                [target.sender_id(s) for s in senders], np.int32)
+            fid = target.fns.id(fn)
+            target.submit_arrays(TxArrays(
+                times, np.full(n, gas, np.int64),
+                np.full(n, fid, np.int32), sender_ids, target.fns))
+        else:
+            if callable(payloads):
+                payloads = payloads()
+            for k, s in enumerate(senders):
+                target.submit(Tx(fn, s,
+                                 payloads[k] if payloads else {}, gas,
+                                 float(times[k])))
+        self.protocol_calls[fn] = self.protocol_calls.get(fn, 0) + n
+
+    # -- fused end-of-task settlement (step 16, Eq. 2-10) -------------------------
+    def settle_window(self, runtimes) -> None:
+        """Settle every task that reached "settle_ready" in this window:
+        ONE fused reputation update over all K cohorts (batched
+        participation masks), then per-task score recording, escrow payout
+        and reputation txs.  Row order = runtime order (deterministic)."""
+        if not runtimes:
+            return
+        n = len(self.trainer_ids)
+        stack = lambda key: np.stack([getattr(rt, key) for rt in runtimes])
+        rounds_total = np.stack([np.full(n, float(rt.rounds), np.float32)
+                                 for rt in runtimes])
+        self.book, diags = end_of_multitask_update(
+            self.book, stack("score_auto"), stack("completed"), rounds_total,
+            stack("dists"), stack("participated"), self.rep_params)
+        reputations = np.asarray(self.book.reputation)
+        s_rep = np.asarray(diags["s_rep"])
+        for k, rt in enumerate(runtimes):
+            self._tx_batch("calculateSubjectiveRep",
+                           [self.trainer_ids[i] for i in rt.sel_idx],
+                           lambda k=k, rt=rt: [{"value": float(s_rep[k, i])}
+                                               for i in rt.sel_idx])
+            self.tsc.record_scores(rt.task_id, {
+                self.trainer_ids[i]: float(rt.score_auto[i])
+                for i in rt.sel_idx})
+            payouts = self.tsc.close_task(rt.task_id)
+            diag_k = {key: np.asarray(v[k]) for key, v in diags.items()}
+            rt.result = FLTaskResult(rt.params, rt.score_auto, reputations,
+                                     payouts, [diag_k])
+            rt.phase = "done"
+
+    # -- one full task (steps 1-16 of Fig. 1), driven sequentially ----------------
+    def run_task(self, task_id: str, agents, batch_fn=None, rounds: int = 5,
                  reward: float = 10.0, n_select: Optional[int] = None
                  ) -> FLTaskResult:
-        n = len(agents)
-        model_cid = self.store.put({"arch": self.model.cfg.name})
-        # 1-2: publish (escrow locks the reward)
-        self.tsc.publish_task("tp0", task_id, model_cid, model_cid,
-                              rounds, 0.5, reward)
-        self._tx("publishTask", "tp0", {"taskId": task_id})
-        # select trainers by reputation
-        reps = {t: float(r) for t, r in
-                zip(self.trainer_ids, np.asarray(self.book.reputation))}
-        selected = self.tsc.select_trainers(task_id, reps, n_select or n)
-        sel_idx = [self.trainer_ids.index(t) for t in selected]
-        for t in selected:
-            self.escrow.lock_collateral(t, task_id, 1.0)
-
-        params = self.model.init_params(jax.random.key(0))
-        opt_states = {i: self.opt.init(params) for i in sel_idx}
-        completed = np.zeros(n)
-        diagnostics = []
-
-        last_submissions: Dict[int, object] = {}
-        for rnd in range(rounds):
-            # 3-6: local training + submit
-            submissions = {}
-            for i in sel_idx:
-                agent = agents[i]
-                out = agent.train_round(params, opt_states[i], i, rnd)
-                if out is None:
-                    continue
-                completed[i] += 1
-                opt_states[i] = out["opt_state"]
-                submissions[i] = out["params"]
-                self.tsc.submit_local_model(self.trainer_ids[i], task_id,
-                                            rnd, out["cid"])
-                self._tx("submitLocalModel", self.trainer_ids[i],
-                         {"taskId": task_id, "round": rnd, "cid": out["cid"]})
-            if not submissions:
-                self.tsc.advance_round(task_id)
-                continue
-            last_submissions = submissions
-            # 7-10: DON evaluation
-            idxs = sorted(submissions)
-            scores, report = evaluate_quorum(
-                self.eval_fn, [submissions[i] for i in idxs],
-                self.val_batch, self.don)
-            for i in idxs:
-                self._tx("calculateObjectiveRep", self.trainer_ids[i],
-                         {"value": float(scores[idxs.index(i)])})
-            # 11-15: reputation-weighted aggregation (Eq. 1)
-            stacked = jax.tree.map(
-                lambda *xs: jnp.stack(xs), *[submissions[i] for i in idxs])
-            params = weighted_average_tree(stacked, scores,
-                                           self.use_pallas_agg)
-            self.tsc.advance_round(task_id)
-
-        # 16: end-of-task reputation refresh (Eq. 2-10)
-        from repro.core.aggregation import tree_flat
-        g_flat = tree_flat(params)
-        dists = np.zeros(n, np.float32)
-        score_auto = np.zeros(n, np.float32)
-        participated = np.zeros(n, np.float32)
-        for i in sel_idx:
-            participated[i] = 1.0
-            if i in last_submissions:
-                l_flat = tree_flat(last_submissions[i])
-                dists[i] = float(jnp.linalg.norm(l_flat - g_flat))
-                score_auto[i] = float(self.eval_fn(last_submissions[i],
-                                                   self.val_batch))
-            else:
-                dists[i] = float(np.max(dists)) if dists.any() else 1.0
-        self.book, diag = end_of_task_update(
-            self.book, jnp.asarray(score_auto), jnp.asarray(completed),
-            jnp.full(n, float(rounds)), jnp.asarray(dists),
-            jnp.asarray(participated), self.rep_params)
-        for i in sel_idx:
-            self._tx("calculateSubjectiveRep", self.trainer_ids[i],
-                     {"value": float(diag["s_rep"][i])})
-        diagnostics.append(jax.tree.map(np.asarray, diag))
-
-        # settle: score-proportional rewards; zero-score slashed
-        self.tsc.record_scores(task_id, {
-            self.trainer_ids[i]: float(score_auto[i]) for i in sel_idx})
-        payouts = self.tsc.close_task(task_id)
+        """Sequential single-task driver over the TaskRuntime state machine
+        (``agents``: a list of TrainingAgents or a fl/cohort.py cohort).
+        ``Scheduler`` with this one task produces identical outputs — pinned
+        by tests/test_scheduler.py."""
+        from repro.fl.scheduler import TaskRuntime
+        rt = TaskRuntime(self, task_id, agents, rounds=rounds, reward=reward,
+                         n_select=n_select)
+        while rt.phase not in ("settle_ready", "done"):
+            rt.step()
+        self.settle_window([rt])
         if self.rollup is not None:
             self.rollup.flush()
         self.chain.run_until(self._clock + 5.0)
-        return FLTaskResult(params, score_auto,
-                            np.asarray(self.book.reputation), payouts,
-                            diagnostics)
+        return rt.result

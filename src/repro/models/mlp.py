@@ -1,0 +1,47 @@
+"""Tiny MLP duck-typing the Model facade (cfg / init_params / loss).
+
+Used by the protocol-layer benchmark and scheduler tests, where per-trainer
+FL compute must stay negligible so protocol costs dominate (the paper's own
+TPS experiments flood transactions rather than train models).  Operates on
+feature-vector batches: {"x": (B, d_in) float32, "labels": (B,) int32}.
+"""
+from __future__ import annotations
+
+import types
+
+import jax
+import jax.numpy as jnp
+
+
+class TinyMLP:
+    def __init__(self, d_in: int = 64, d_h: int = 32, n_classes: int = 10,
+                 name: str = "tiny-mlp"):
+        self.cfg = types.SimpleNamespace(name=name)
+        self.d_in, self.d_h, self.n_classes = d_in, d_h, n_classes
+
+    def init_params(self, key):
+        k1, k2 = jax.random.split(key)
+        s1 = (2.0 / self.d_in) ** 0.5
+        return {"w1": jax.random.normal(k1, (self.d_in, self.d_h),
+                                        jnp.float32) * s1,
+                "b1": jnp.zeros((self.d_h,)),
+                "w2": jax.random.normal(k2, (self.d_h, self.n_classes),
+                                        jnp.float32) * 0.2,
+                "b2": jnp.zeros((self.n_classes,))}
+
+    def logits(self, p, batch):
+        h = jax.nn.relu(batch["x"] @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss(self, p, batch):
+        lo = self.logits(p, batch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lo, axis=-1)
+        ll = jnp.take_along_axis(
+            lo, batch["labels"][:, None].astype(jnp.int32), axis=-1)[..., 0]
+        return jnp.mean(lse - ll)
+
+    def accuracy_fn(self):
+        """Jitted eval_fn(params, batch) -> accuracy scalar (DON scoring)."""
+        return jax.jit(lambda p, b: jnp.mean(
+            (jnp.argmax(self.logits(p, b), -1) == b["labels"])
+            .astype(jnp.float32)))

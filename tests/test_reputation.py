@@ -9,9 +9,10 @@ try:
 except ImportError:   # degrade: property tests skip, the rest still run
     from conftest import given, settings, st  # noqa: F401
 
-from repro.core.reputation import (ReputationParams, end_of_task_update,
-                                   init_book, local_reputation,
-                                   model_distances, normalised_distances,
+from repro.core.reputation import (ReputationParams, end_of_multitask_update,
+                                   end_of_task_update, init_book,
+                                   local_reputation, model_distances,
+                                   normalised_distances,
                                    objective_reputation, subjective_opinion,
                                    subjective_reputation, tenure_weight,
                                    update_reputation)
@@ -136,6 +137,60 @@ def test_end_of_task_profiles():
     assert rep[0] > 0.7 and rep[1] < 0.25 and rep[1] < rep[2] < rep[0]
     for v in jax.tree.leaves(diag):
         assert np.all(np.isfinite(np.asarray(v)))
+
+
+def _random_task_rows(rng, k, n):
+    score = rng.uniform(0.0, 1.0, (k, n)).astype(np.float32)
+    completed = rng.integers(0, 11, (k, n)).astype(np.float32)
+    dist = rng.uniform(0.1, 5.0, (k, n)).astype(np.float32)
+    part = (rng.random((k, n)) > 0.3).astype(np.float32)
+    part[:, 0] = 1.0                       # overlap: trainer0 in every task
+    return score, completed, np.full((k, n), 10.0, np.float32), dist, part
+
+
+def test_multitask_update_matches_sequential():
+    """Fused K-task settlement == K sequential end_of_task_update calls
+    (same row order), including overlapping participation masks."""
+    rng = np.random.default_rng(7)
+    k, n = 4, 6
+    score, completed, total, dist, part = _random_task_rows(rng, k, n)
+
+    seq_book = init_book(n)
+    seq_diags = []
+    for j in range(k):
+        seq_book, d = end_of_task_update(
+            seq_book, jnp.asarray(score[j]), jnp.asarray(completed[j]),
+            jnp.asarray(total[j]), jnp.asarray(dist[j]),
+            jnp.asarray(part[j]))
+        seq_diags.append(d)
+
+    fused_book, diags = end_of_multitask_update(
+        init_book(n), score, completed, total, dist, part)
+
+    for a, b in zip(jax.tree.leaves(seq_book), jax.tree.leaves(fused_book)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+    for key in ("o_rep", "s_rep", "l_rep"):
+        want = np.stack([np.asarray(d[key]) for d in seq_diags])
+        np.testing.assert_allclose(np.asarray(diags[key]), want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_multitask_update_single_row_matches_single_task():
+    rng = np.random.default_rng(3)
+    n = 5
+    score, completed, total, dist, part = _random_task_rows(rng, 1, n)
+    book_a, diag_a = end_of_task_update(
+        init_book(n), jnp.asarray(score[0]), jnp.asarray(completed[0]),
+        jnp.asarray(total[0]), jnp.asarray(dist[0]), jnp.asarray(part[0]))
+    book_b, diag_b = end_of_multitask_update(
+        init_book(n), score, completed, total, dist, part)
+    for a, b in zip(jax.tree.leaves(book_a), jax.tree.leaves(book_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+    np.testing.assert_allclose(np.asarray(diag_a["s_rep"]),
+                               np.asarray(diag_b["s_rep"][0]), rtol=1e-6,
+                               atol=1e-7)
 
 
 def test_non_participants_unchanged():

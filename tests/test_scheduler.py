@@ -1,0 +1,328 @@
+"""Multi-task scheduler layer tests.
+
+Pins the PR-2 contracts:
+  * Scheduler with ONE task reproduces AutoDFL.run_task outputs (scores,
+    reputations, payouts, chain gas totals) on both engines;
+  * concurrent tasks over the vector engine settle correctly (fused
+    multi-task reputation window, shared rollup, background traffic);
+  * TaskContract.select_trainers ties break by stable trainer index;
+  * the batched DON scoring pass equals the per-call loop, and falls back
+    for non-vmappable eval_fns;
+  * cross_verify_aggregate's permuted recompute paths catch a stateful
+    (call-dependent) aggregator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.escrow import Escrow
+from repro.core.ledger import AccessControl
+from repro.core.oracle import (DONConfig, cross_verify_aggregate,
+                               evaluate_quorum)
+from repro.core.storage import BlobStore
+from repro.core.tasks import TaskContract
+from repro.data.synthetic import gaussian_clusters
+from repro.fl.client import ClientConfig, TrainingAgent
+from repro.fl.cohort import CohortKernels, VectorCohort, batched_batch_fn
+from repro.fl.dp import DPConfig
+from repro.fl.scheduler import Scheduler
+from repro.fl.server import AutoDFL
+from repro.models.mlp import TinyMLP
+from repro.optim.optimizers import OptimizerSpec, make_optimizer
+
+D_IN, D_H, N_CLS = 32, 16, 10
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    model = TinyMLP(D_IN, D_H, N_CLS)
+    opt = make_optimizer(OptimizerSpec(name="sgdm", lr=0.1, grad_clip=5.0))
+    tr_x, tr_y = gaussian_clusters(1024, D_IN, N_CLS, seed=1, noise=0.5)
+    vx, vy = gaussian_clusters(100, D_IN, N_CLS, seed=2, noise=0.5)
+    val = {"x": jnp.asarray(vx), "labels": jnp.asarray(vy)}
+
+    def bf(c, r):
+        g = np.random.default_rng((c * 9973 + r) % 2**31)
+        idx = g.integers(0, len(tr_x), 8)
+        return {"x": jnp.asarray(tr_x[idx]), "labels": jnp.asarray(tr_y[idx])}
+
+    eval_fn = model.accuracy_fn()
+    return model, opt, val, bf, eval_fn
+
+
+BEHAVIORS = ["good", "good", "malicious", "lazy"]
+
+
+def _mk_agents(model, opt, store, bf):
+    return [TrainingAgent(
+        ClientConfig(f"trainer{i}", BEHAVIORS[i], local_steps=2,
+                     dp=DPConfig(noise_multiplier=0.05)),
+        model, opt, store, bf, seed=i) for i in range(len(BEHAVIORS))]
+
+
+# -- satellite: Scheduler(1 task) == run_task, both engines --------------------
+@pytest.mark.parametrize("engine", ["object", "vector"])
+def test_scheduler_single_task_equivalent_to_run_task(tiny_world, engine):
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+
+    sys_a = AutoDFL(model, opt, n, eval_fn, val, engine=engine)
+    res_a = sys_a.run_task("t0", _mk_agents(model, opt, sys_a.store, bf),
+                           bf, rounds=3)
+
+    sys_b = AutoDFL(model, opt, n, eval_fn, val, engine=engine)
+    sch = Scheduler(sys_b)
+    sch.add_task("t0", _mk_agents(model, opt, sys_b.store, bf), rounds=3)
+    res_b = sch.run()["t0"]
+
+    np.testing.assert_array_equal(res_a.scores, res_b.scores)
+    np.testing.assert_array_equal(res_a.reputations, res_b.reputations)
+    assert res_a.payouts == res_b.payouts
+    for leaf_a, leaf_b in zip(jax.tree.leaves(res_a.global_params),
+                              jax.tree.leaves(res_b.global_params)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    # gas totals are timing-invariant: same txs, same per-fn gas
+    assert sys_a.chain.total_gas == sys_b.chain.total_gas
+    assert sys_a.protocol_calls == sys_b.protocol_calls
+    if sys_a.rollup is not None:
+        tot = lambda s: round(sum(r["total"] for r in s.rollup.gas_log), 6)
+        assert tot(sys_a) == tot(sys_b)
+
+
+# -- concurrent tasks over the vector engine -----------------------------------
+def test_scheduler_concurrent_tasks_vector_cohorts(tiny_world):
+    from repro.core.workloads import make_workload
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+    node = AutoDFL(model, opt, n, eval_fn, val, engine="vector",
+                   trainer_funds=50.0)
+    kern = CohortKernels(model, opt, DPConfig(noise_multiplier=0.05))
+    vbf = batched_batch_fn(bf, local_steps=2)
+    # distinct fn name so background txs are identifiable in the SoA stream
+    sch = Scheduler(node, seal_every=2,
+                    background=make_workload("poisson", 20.0, duration=10.0,
+                                             seed=3, fn="bgPing"))
+    n_tasks = 3
+    for t in range(n_tasks):
+        cohort = VectorCohort(model, opt, vbf, node.store,
+                              behaviors=BEHAVIORS, local_steps=2,
+                              dp=DPConfig(noise_multiplier=0.05), seed=t,
+                              kernels=kern)
+        sch.add_task(f"task{t}", cohort, rounds=3, start_window=t % 2)
+    out = sch.run()
+
+    assert set(out) == {f"task{t}" for t in range(n_tasks)}
+    for res in out.values():
+        assert res is not None and res.scores.shape == (n,)
+    # every task's cohort participated: the book advanced n_tasks times
+    np.testing.assert_allclose(np.asarray(node.book.n_tasks),
+                               np.full(n, float(n_tasks)))
+    reps = np.asarray(node.book.reputation)
+    assert reps[2] < reps[0] and reps[2] < reps[1]   # malicious collapses
+    # free-rider earns far less than honest trainers in every task
+    for res in out.values():
+        assert res.payouts["trainer2"] <= 0.35 * max(res.payouts["trainer0"],
+                                                     1e-9)
+    # protocol + background txs all made it through the shared ledger
+    assert node.chain.total_gas > 0
+    assert node.rollup.n_batches > 0
+    assert node.chain.n_confirmed == node.chain.n_submitted
+    # background genuinely RACES protocol traffic: it confirms promptly
+    # (no head-of-line stall behind future-stamped protocol txs) ...
+    bg = node.chain._f[:node.chain.n_confirmed] == \
+        node.chain.fns.id("bgPing")
+    assert bg.any()
+    bg_lat = (node.chain._confirm[:node.chain.n_confirmed][bg]
+              - node.chain._t[:node.chain.n_confirmed][bg])
+    assert float(bg_lat.mean()) < 2.5, float(bg_lat.mean())
+    # ... and its senders live in the chain's namespace (same "client<k>"
+    # actors the object engine attributes), not raw workload ids
+    assert any(s.startswith("client") for s in node.chain._sender_ids)
+    # same seeds -> bit-identical protocol outputs (scheduler determinism)
+    node2 = AutoDFL(model, opt, n, eval_fn, val, engine="vector",
+                    trainer_funds=50.0)
+    kern2 = CohortKernels(model, opt, DPConfig(noise_multiplier=0.05))
+    sch2 = Scheduler(node2, seal_every=2,
+                     background=make_workload("poisson", 20.0, duration=10.0,
+                                              seed=3, fn="bgPing"))
+    for t in range(n_tasks):
+        cohort = VectorCohort(model, opt, batched_batch_fn(bf, 2),
+                              node2.store, behaviors=BEHAVIORS,
+                              local_steps=2,
+                              dp=DPConfig(noise_multiplier=0.05), seed=t,
+                              kernels=kern2)
+        sch2.add_task(f"task{t}", cohort, rounds=3, start_window=t % 2)
+    out2 = sch2.run()
+    for t in range(n_tasks):
+        np.testing.assert_array_equal(out[f"task{t}"].scores,
+                                      out2[f"task{t}"].scores)
+    assert node.chain.total_gas == node2.chain.total_gas
+
+
+def test_scheduler_seal_every_works_on_object_engine(tiny_world):
+    """seal_every must drain the object Rollup too (it has no seal();
+    regression for a vector-only AttributeError)."""
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+    node = AutoDFL(model, opt, n, eval_fn, val, engine="object")
+    sch = Scheduler(node, seal_every=1)
+    sch.add_task("t0", _mk_agents(model, opt, node.store, bf), rounds=2)
+    res = sch.run()["t0"]
+    assert res is not None
+    assert node.rollup.gas_log
+    assert not node.rollup.pending                 # everything sealed
+
+
+def test_batched_eval_cache_handles_bound_methods(tiny_world):
+    from repro.core.oracle import _batched_eval
+    model, opt, val, bf, eval_fn = tiny_world
+
+    class Evaluator:
+        def __call__(self, p, b):                  # plain callable instance
+            return eval_fn(p, b)
+
+        def score(self, p, b):                     # bound method
+            return eval_fn(p, b)
+
+    ev = Evaluator()
+    assert _batched_eval(ev.score)[0] is _batched_eval(ev.score)[0]
+    assert _batched_eval(ev)[0] is _batched_eval(ev)[0]
+    # distinct instances must NOT share wrappers (they close over self)
+    assert _batched_eval(ev.score)[0] is not _batched_eval(Evaluator().score)[0]
+
+
+def test_multitask_settlement_matches_sequential_closes(tiny_world):
+    """K tasks closing in one window == the same K closing one-per-window
+    (the fused end_of_multitask_update preserves sequential semantics)."""
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+
+    def run(stagger):
+        node = AutoDFL(model, opt, n, eval_fn, val, engine="vector",
+                       trainer_funds=50.0)
+        kern = CohortKernels(model, opt, DPConfig(noise_multiplier=0.05))
+        sch = Scheduler(node)
+        for t in range(3):
+            cohort = VectorCohort(model, opt, batched_batch_fn(bf, 2),
+                                  node.store, behaviors=BEHAVIORS,
+                                  local_steps=2,
+                                  dp=DPConfig(noise_multiplier=0.05),
+                                  seed=t, kernels=kern)
+            sch.add_task(f"task{t}", cohort, rounds=2,
+                         start_window=t if stagger else 0)
+        sch.run()
+        return np.asarray(node.book.reputation)
+
+    together, staggered = run(False), run(True)
+    np.testing.assert_allclose(together, staggered, rtol=1e-6)
+
+
+# -- satellite: deterministic trainer selection ---------------------------------
+def _tsc(n=4):
+    acl = AccessControl(["admin0", "admin1", "admin2"])
+    tsc = TaskContract(acl, Escrow(), BlobStore())
+    ids = [f"trainer{i}" for i in range(n)]
+    for t in ids:
+        acl.grant("admin0", t, "trainer")
+        tsc.escrow.fund(t, 10.0)
+    acl.grant("admin0", "tp0", "task_publisher")
+    tsc.escrow.fund("tp0", 100.0)
+    return tsc, ids
+
+
+def test_select_trainers_tie_break_by_stable_index():
+    tsc, ids = _tsc(4)
+    tsc.publish_task("tp0", "t0", tsc.store.put({}), tsc.store.put({}),
+                     1, 0.5, 1.0)
+    # trainer0/1/3 tie: selection must prefer LOWER index, not reverse-
+    # lexicographic id order (the old tuple sort picked trainer3 first)
+    reps = {"trainer0": 0.5, "trainer1": 0.5, "trainer2": 0.7,
+            "trainer3": 0.5}
+    assert tsc.select_trainers("t0", reps, 3) == \
+        ["trainer2", "trainer0", "trainer1"]
+    # array form: no dict roundtrip, same ranking
+    tsc2, ids2 = _tsc(4)
+    tsc2.publish_task("tp0", "t0", tsc2.store.put({}), tsc2.store.put({}),
+                      1, 0.5, 1.0)
+    got = tsc2.select_trainers("t0", np.array([0.5, 0.5, 0.7, 0.5]), 3,
+                               trainer_ids=ids2)
+    assert got == ["trainer2", "trainer0", "trainer1"]
+
+
+def test_select_trainers_min_rep_and_roles():
+    tsc, ids = _tsc(4)
+    tsc.acl.ban("admin0", "trainer3")
+    tsc.publish_task("tp0", "t0", tsc.store.put({}), tsc.store.put({}),
+                     1, 0.5, 1.0)
+    got = tsc.select_trainers("t0", np.array([0.9, 0.1, 0.6, 0.95]), 10,
+                              min_rep=0.5, trainer_ids=ids)
+    assert got == ["trainer0", "trainer2"]   # banned + low-rep filtered
+
+
+# -- batched DON scoring pass ---------------------------------------------------
+def test_evaluate_quorum_batched_matches_loop(tiny_world):
+    model, opt, val, bf, eval_fn = tiny_world
+    params = [model.init_params(jax.random.key(i)) for i in range(3)]
+    cfg = DONConfig(n_oracles=5)
+    s_b, rep_b = evaluate_quorum(eval_fn, params, val, cfg, mode="batched")
+    s_l, rep_l = evaluate_quorum(eval_fn, params, val, cfg, mode="loop")
+    np.testing.assert_allclose(rep_b["table"], rep_l["table"], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_b), np.asarray(s_l), atol=1e-6)
+    assert rep_b["flagged_oracles"] == rep_l["flagged_oracles"]
+    # stacked-tree input (scheduler hot path) == list input
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+    s_s, rep_s = evaluate_quorum(eval_fn, stacked, val, cfg, mode="batched")
+    np.testing.assert_allclose(np.asarray(s_s), np.asarray(s_b), atol=1e-6)
+
+
+def test_evaluate_quorum_auto_falls_back_for_nonvmappable(tiny_world):
+    model, opt, val, bf, eval_fn = tiny_world
+    params = [model.init_params(jax.random.key(i)) for i in range(2)]
+
+    def hostile_eval(p, b):         # float() forces concretization: no vmap
+        return float(eval_fn(p, b))
+
+    s_auto, _ = evaluate_quorum(hostile_eval, params, val,
+                                DONConfig(n_oracles=3), mode="auto")
+    s_loop, _ = evaluate_quorum(hostile_eval, params, val,
+                                DONConfig(n_oracles=3), mode="loop")
+    np.testing.assert_allclose(np.asarray(s_auto), np.asarray(s_loop))
+    # the non-vmappable verdict is memoized: later auto calls skip the
+    # doomed vmap trace entirely (hostile_eval never re-invoked batched)
+    from repro.core.oracle import (_UNBATCHABLE, _eval_cache_get,
+                                   _eval_cache_key)
+    assert _eval_cache_get(_eval_cache_key(hostile_eval)) is _UNBATCHABLE
+    s_again, _ = evaluate_quorum(hostile_eval, params, val,
+                                 DONConfig(n_oracles=3), mode="auto")
+    np.testing.assert_allclose(np.asarray(s_again), np.asarray(s_loop))
+    with pytest.raises(Exception):
+        evaluate_quorum(hostile_eval, params, val, DONConfig(n_oracles=3),
+                        mode="batched")
+
+
+# -- satellite: meaningful aggregation quorum -----------------------------------
+def test_cross_verify_aggregate_passes_honest_and_catches_stateful():
+    from repro.core.aggregation import weighted_average_tree
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.normal(size=(6, 33)).astype(np.float32))}
+    scores = jnp.asarray(rng.uniform(0.1, 1.0, 6).astype(np.float32))
+    ref, agree = cross_verify_aggregate(weighted_average_tree, stacked,
+                                        scores, DONConfig(n_oracles=5))
+    assert agree == 5                      # honest agg agrees on every path
+    np.testing.assert_allclose(
+        np.asarray(ref["w"]),
+        np.asarray(weighted_average_tree(stacked, scores)["w"]), rtol=1e-5)
+
+    calls = {"n": 0}
+
+    def stateful_agg(s, sc):               # result depends on call history
+        calls["n"] += 1
+        out = weighted_average_tree(s, sc)
+        if calls["n"] > 1:
+            out = jax.tree.map(lambda l: l + 0.1 * calls["n"], out)
+        return out
+
+    with pytest.raises(RuntimeError, match="quorum failed"):
+        cross_verify_aggregate(stateful_agg, stacked, scores,
+                               DONConfig(n_oracles=5))
