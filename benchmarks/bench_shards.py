@@ -1,0 +1,110 @@
+"""Sharded rollup fabric benchmark: sealed-batch throughput vs shard count.
+
+Methodology (recorded so BENCH_shards.json entries stay comparable):
+  * Fixed workload: the Table-I ``mixed`` function blend (seed 0), the SAME
+    transaction set submitted to every shard count.
+  * Each point builds one shared L1 ``VectorChain`` + a ``ShardedRollup``
+    with K shards (hash routing, default lanes/batch size) and the default
+    protocol state handlers wired, then seals + settles everything.
+  * ``sealed_batch_throughput`` is the MODELED fabric throughput at this
+    workload: txs / fabric session latency from the Table-II-calibrated
+    latency model (shards sequence concurrently, so the fabric latency is
+    the slowest shard's even-split share) — deterministic, so CI can
+    assert on it.  Wall-clock seal time is recorded alongside for context
+    but never asserted (shared runners are noisy).
+  * The flat array state root must reproduce bit-for-bit across shard
+    counts AND across two independent runs — the fabric's correctness
+    story; asserted every run, every mode.
+
+Acceptance (full mode): modeled sealed-batch throughput at 8 shards is
+>= 3x the 1-shard fabric on the same workload.  Quick mode (CI smoke)
+runs the reduced 2-shard config and asserts >= 1.5x plus the root pins.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import numpy as np
+
+from repro.core.engine import VectorChain
+from repro.core.shards import ShardedRollup
+from repro.core.state import default_state_handlers
+from repro.core.workloads import make_workload
+
+
+def _run_point(wl, n_shards: int) -> Dict:
+    chain = VectorChain(fns=wl.txs.fns)
+    fabric = ShardedRollup(chain, n_shards=n_shards)
+    for fn, handler in default_state_handlers().items():
+        fabric.register_state(fn, handler)
+    t0 = time.perf_counter()
+    fabric.submit_arrays(wl.txs)
+    fabric.flush()
+    seal_wall = time.perf_counter() - t0
+    chain.run_until(wl.duration + 5.0)
+    n = len(wl)
+    assert sum(r["n_txs"] for r in fabric.gas_log) == n, \
+        "every tx must seal in exactly one shard"
+    return {
+        "n_shards": n_shards,
+        "n_txs": n,
+        "n_batches": fabric.n_batches,
+        "seal_wall_s": round(seal_wall, 4),
+        "fabric_latency_s": round(fabric.latency(n), 2),
+        "sealed_batch_tps": round(fabric.sealed_batch_throughput(n), 1),
+        "l2_gas": int(sum(r["total"] for r in fabric.gas_log)),
+        "l1_total_gas": int(chain.total_gas),
+        "state_root": fabric.state_root(),
+        "fabric_root": fabric.fabric_root(),
+    }
+
+
+def run(quick: bool = False) -> Dict:
+    rate, duration = (2_000.0, 10.0) if quick else (20_000.0, 10.0)
+    shard_counts = [1, 2] if quick else [1, 2, 4, 8]
+    wl = make_workload("mixed", rate, duration=duration, seed=0)
+    points = {f"shards={k}": _run_point(wl, k) for k in shard_counts}
+
+    roots = {k: p["state_root"] for k, p in points.items()}
+    assert len(set(roots.values())) == 1, \
+        f"array state root must not depend on the shard count: {roots}"
+    rerun = _run_point(wl, shard_counts[-1])
+    assert rerun["state_root"] == points[
+        f"shards={shard_counts[-1]}"]["state_root"], "root must reproduce"
+    assert rerun["fabric_root"] == points[
+        f"shards={shard_counts[-1]}"]["fabric_root"]
+
+    hi, lo = shard_counts[-1], shard_counts[0]
+    scaling = points[f"shards={hi}"]["sealed_batch_tps"] / \
+        max(points[f"shards={lo}"]["sealed_batch_tps"], 1e-9)
+    floor = 1.5 if quick else 3.0
+    assert scaling >= floor, (
+        f"{hi}-shard fabric must sustain >= {floor}x the {lo}-shard "
+        f"sealed-batch throughput, got {scaling:.2f}x")
+    return {"quick": quick, "workload": "mixed",
+            "rate": rate, "duration": duration,
+            "shard_counts": shard_counts, "points": points,
+            "state_root": roots[f"shards={lo}"],
+            "scaling": round(scaling, 2), "scaling_floor": floor}
+
+
+if __name__ == "__main__":
+    import json
+    quick = os.environ.get("BENCH_QUICK", "") not in ("", "0", "false")
+    out = run(quick=quick)
+    path = os.environ.get(
+        "BENCH_SHARDS_JSON",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "BENCH_shards.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+    print(f"# wrote {path}", file=sys.stderr)

@@ -11,6 +11,11 @@ comparable across PRs (see README "Benchmark methodology").
 
 ``BENCH_QUICK=1`` runs a reduced smoke mode (CI): smaller tx counts, same
 assertions except the 1M-tx speedup floor (which needs the full run).
+
+``python benchmarks/run.py --all`` runs NO benchmarks: it aggregates every
+``BENCH_*.json`` already in ``benchmarks/`` into one summary table (stdout)
+and writes ``BENCH_summary.json`` — the cross-PR comparison view CI
+artifacts are diffed against.
 """
 from __future__ import annotations
 
@@ -26,16 +31,77 @@ def _timed(fn, *args, **kw):
     return out, (time.perf_counter() - t0) * 1e6
 
 
+# headline metric extractors per BENCH file stem (best-effort: files from
+# older PRs may miss keys; the aggregator records what it finds)
+_HEADLINES = {
+    "BENCH_engine": lambda d: {
+        "speedup": d["out"]["speedup"], "n_txs": d["out"]["n_txs"]},
+    "BENCH_protocol": lambda d: {
+        "speedup": d["speedup"],
+        "assert_point": d["assert_point"]},
+    "BENCH_shards": lambda d: {
+        "scaling": d["scaling"],
+        "shard_counts": d["shard_counts"],
+        "state_root": d["state_root"]},
+    "BENCH": lambda d: {
+        "entries": sorted(d["results"])},
+}
+
+
+def aggregate_all(bench_dir: str) -> dict:
+    """Fold every BENCH_*.json (and BENCH.json) into one summary dict."""
+    summary = {}
+    for fname in sorted(os.listdir(bench_dir)):
+        stem, ext = os.path.splitext(fname)
+        if ext != ".json" or not stem.startswith("BENCH") \
+                or stem == "BENCH_summary":
+            continue
+        path = os.path.join(bench_dir, fname)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as err:
+            summary[stem] = {"error": str(err)}
+            continue
+        entry = {"file": fname, "quick": bool(data.get("quick", False))}
+        extractor = _HEADLINES.get(stem)
+        if extractor is not None:
+            try:
+                entry["headline"] = extractor(data)
+            except (KeyError, TypeError) as err:
+                entry["headline_error"] = repr(err)
+        summary[stem] = entry
+    return summary
+
+
+def run_all(bench_dir: str) -> None:
+    summary = aggregate_all(bench_dir)
+    print("bench,quick,headline")
+    for stem, entry in summary.items():
+        headline = entry.get("headline", entry.get("headline_error",
+                                                   entry.get("error", "")))
+        hl = "|".join(f"{k}={v}" for k, v in headline.items()) \
+            if isinstance(headline, dict) else str(headline)
+        print(f"{stem},{int(entry.get('quick', False))},{hl}")
+    path = os.path.join(bench_dir, "BENCH_summary.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
     # invokable from anywhere: python benchmarks/run.py | python -m benchmarks.run
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for p in (os.path.join(root, "src"), root):
         if p not in sys.path:
             sys.path.insert(0, p)
+    if "--all" in sys.argv[1:]:
+        run_all(os.path.dirname(os.path.abspath(__file__)))
+        return
     from benchmarks import (bench_engine_speedup, bench_gas,
                             bench_l1_throughput, bench_l2_throughput,
                             bench_latency, bench_protocol, bench_reputation,
-                            bench_roofline)
+                            bench_roofline, bench_shards)
 
     quick = os.environ.get("BENCH_QUICK", "") not in ("", "0", "false")
     results = {}
@@ -75,6 +141,16 @@ def main() -> None:
     print(f"engine_vector_speedup,{us:.0f},"
           f"speedup={out['speedup']}x|n_txs={out['n_txs']}"
           f"|quick={int(out['quick'])}")
+
+    if not quick:
+        # quick/CI mode skips this one: the dedicated bench-shards-smoke
+        # CI job already runs the reduced 2-shard config (running it here
+        # too would duplicate the compute and the artifact)
+        out, us = _timed(bench_shards.run, quick=False)
+        results["shard_fabric_scaling"] = {"us_per_call": us, "out": out}
+        print(f"shard_fabric_scaling,{us:.0f},"
+              f"scaling={out['scaling']}x|shards={out['shard_counts'][-1]}"
+              f"|state_root={out['state_root']}|quick=0")
 
     if not quick:
         # quick/CI mode skips this one: the dedicated bench-protocol-smoke

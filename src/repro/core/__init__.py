@@ -3,7 +3,10 @@
 reputation  — Eq. 2-10 reputation model (objective/subjective/local/update)
 aggregation — Eq. 1 reputation-weighted FedAvg (stacked / mesh-psum paths)
 rollup      — zk-Rollup L2 batching engine + TPU rollup-round analogue
+shards      — sharded rollup fabric: K L2 sequencers, one L1, fabric root
+state       — array-native account state + chunked Merkle-style commitment
 ledger      — L1 permissioned chain simulator (QBFT, mempool, gas blocks)
+              + the LedgerBackend protocol unifying all ledger faces
 gas         — Table-I-calibrated gas cost model
 oracle      — DON quorum evaluation / aggregation cross-verification
 tasks       — TSC task lifecycle (publishTask / selectTrainers / submit)

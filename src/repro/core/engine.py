@@ -36,10 +36,18 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.state import MIX_MULT as DIGEST_MULT
+from repro.core.state import MIX_SEED as DIGEST_SEED
+from repro.core.state import Registry
 
-# Mixing constants shared with kernels/rollup_digest.py and fl/round.py.
-DIGEST_MULT = np.uint32(0x85EBCA6B)
-DIGEST_SEED = np.uint32(0x9E3779B9)
+
+def _mix(words: np.ndarray) -> np.ndarray:
+    """THE xor-mix (bit-exact mirror of kernels.rollup_digest); every fold
+    in the repo — scalar, per-batch segments, chunked state commitment —
+    routes through this one implementation so the Pallas-pin test covers
+    all call sites (rollup.Rollup, VectorRollup.seal, core/state.py)."""
+    w = np.ascontiguousarray(words, dtype=np.uint32)
+    return (w ^ (w >> np.uint32(16))) * DIGEST_MULT
 
 
 def xor_fold_digest(words: np.ndarray) -> int:
@@ -48,11 +56,17 @@ def xor_fold_digest(words: np.ndarray) -> int:
     ``rollup_digest`` pads to a block multiple with zeros; zero words mix to
     zero and xor-fold away, so no explicit padding is needed here.
     """
-    w = np.ascontiguousarray(words, dtype=np.uint32)
-    if w.size == 0:
+    if np.size(words) == 0:
         return int(DIGEST_SEED)
-    mixed = (w ^ (w >> np.uint32(16))) * DIGEST_MULT
-    return int(DIGEST_SEED ^ np.bitwise_xor.reduce(mixed))
+    return int(DIGEST_SEED ^ np.bitwise_xor.reduce(_mix(words)))
+
+
+def xor_fold_digest_segments(words: np.ndarray,
+                             starts: np.ndarray) -> np.ndarray:
+    """Segmented fold: one digest per ``[starts[i], starts[i+1])`` word
+    range (u32 array).  Same construction as ``xor_fold_digest`` applied
+    per segment — the multi-batch form VectorRollup.seal uses."""
+    return DIGEST_SEED ^ np.bitwise_xor.reduceat(_mix(words), starts)
 
 
 def pallas_or_numpy_digest(words: np.ndarray, backend: str = "auto") -> int:
@@ -73,25 +87,9 @@ def pallas_or_numpy_digest(words: np.ndarray, backend: str = "auto") -> int:
     return int(rollup_digest(jnp.asarray(words, jnp.uint32)))
 
 
-class FnRegistry:
-    """Stable fn-name <-> integer-id mapping shared across SoA batches."""
-
-    def __init__(self, names: Sequence[str] = ()):
-        self.names: List[str] = []
-        self._ids: Dict[str, int] = {}
-        for n in names:
-            self.id(n)
-
-    def id(self, name: str) -> int:
-        i = self._ids.get(name)
-        if i is None:
-            i = len(self.names)
-            self._ids[name] = i
-            self.names.append(name)
-        return i
-
-    def __len__(self) -> int:
-        return len(self.names)
+class FnRegistry(Registry):
+    """Stable fn-name <-> integer-id mapping shared across SoA batches
+    (the function-namespace face of core/state.py's generic Registry)."""
 
 
 @dataclasses.dataclass
@@ -175,6 +173,11 @@ class VectorChain:
     """Vectorized mirror of ``ledger.Chain``: QBFT quorum, gas-limited FIFO
     block packing over SoA arrays, O(log n) per block."""
 
+    # SoA is this face's NATIVE path (emitters dispatch batched emission on
+    # this flag, not on submit_arrays presence — the object faces expose a
+    # lowering submit_arrays adapter too, but drop nothing when fed Txs)
+    soa_native = True
+
     def __init__(self, n_validators: int = 4, block_time: float = 1.0,
                  block_gas_limit: int = 9_000_000,
                  gas_table: GasTable = DEFAULT_GAS,
@@ -190,6 +193,11 @@ class VectorChain:
         self.state: Dict[str, Any] = {}
         self.total_gas = 0
         self._batch_handlers: Dict[int, Callable] = {}
+        # LedgerBackend face: handlers written against (StateArrays,
+        # TxArrays-view), called once per (block, fn) with the fn-filtered
+        # confirmed slice (see ledger.LedgerBackend.register_state)
+        self.state_arrays = None
+        self._state_handlers: Dict[int, Callable] = {}
         self._sender_ids: Dict[str, int] = {}    # submit(tx) shim namespace
         # consolidated mempool arrays (arrival order, never reordered).
         # Geometric (doubling) capacity growth + incremental running-max /
@@ -213,6 +221,18 @@ class VectorChain:
         """Batched handler: handler(state, n_calls, tx_slice: TxArrays-view).
         Called once per (block, fn) instead of once per tx."""
         self._batch_handlers[self.fns.id(fn)] = handler
+
+    def register_state(self, fn: str, handler: Callable):
+        """StateArrays handler (LedgerBackend): handler(state_arrays, view)
+        with ``view`` holding only ``fn``'s confirmed txs, block order."""
+        if self.state_arrays is None:
+            from repro.core.state import StateArrays
+            self.state_arrays = StateArrays()
+        self._state_handlers[self.fns.id(fn)] = handler
+
+    def state_root(self) -> str:
+        return self.state_arrays.root() if self.state_arrays is not None \
+            else ""
 
     def submit_arrays(self, batch: TxArrays):
         if batch.fns is not self.fns:
@@ -305,7 +325,7 @@ class VectorChain:
         gas_used = (int(self._gcum[stop - 1]) - base) if stop > ptr else 0
         if stop > ptr:
             self._confirm[ptr:stop] = now
-            if self._batch_handlers:
+            if self._batch_handlers or self._state_handlers:
                 counts = np.bincount(self._f[ptr:stop],
                                      minlength=len(self.fns))
                 view = TxArrays(self._t[ptr:stop], self._g[ptr:stop],
@@ -314,6 +334,13 @@ class VectorChain:
                 for fid, h in self._batch_handlers.items():
                     if fid < counts.shape[0] and counts[fid]:
                         h(self.state, int(counts[fid]), view)
+                for fid, h in self._state_handlers.items():
+                    if fid < counts.shape[0] and counts[fid]:
+                        m = view.fn_id == fid
+                        h(self.state_arrays,
+                          TxArrays(view.submit_time[m], view.gas[m],
+                                   view.fn_id[m], view.sender_id[m],
+                                   self.fns))
         assert self.quorum(self.n_validators - self.n_validators // 3)
         blk = BlockStats(len(self.blocks), now, stop - ptr, gas_used,
                          ptr, stop, self.blocks[-1].block_hash)
@@ -366,6 +393,8 @@ class VectorRollup:
     reproduces ``Rollup``'s gas_log exactly (tests/test_engine.py).
     """
 
+    soa_native = True
+
     def __init__(self, l1, batch_size: int = ROLLUP_BATCH,
                  gas_table: GasTable = DEFAULT_GAS,
                  prove_time: float = 0.9, per_tx_time: float = 0.14,
@@ -384,6 +413,10 @@ class VectorRollup:
         self.fns: FnRegistry = l1_fns if l1_fns is not None else FnRegistry()
         self._sender_ids: Dict[str, int] = {}
         self.gas_log: List[Dict[str, Any]] = []
+        # LedgerBackend face: StateArrays handlers applied at seal time
+        # over the sealed txs in ARRIVAL order (pre-lane-sort), fn-filtered
+        self.state_arrays = None
+        self._state_handlers: Dict[int, Callable] = {}
         self.batch_digests: List[int] = []      # per-batch tx xor-roots
         self.update_digest: int = int(DIGEST_SEED)  # merged-buffer digest
         self.n_batches = 0
@@ -408,6 +441,26 @@ class VectorRollup:
         (same contract as VectorChain.sender_id; batched emitters must use
         the TARGET's namespace so ids stay consistent within one stream)."""
         return self._sender_ids.setdefault(sender, len(self._sender_ids))
+
+    def register_state(self, fn: str, handler: Callable):
+        """StateArrays handler (LedgerBackend): handler(state_arrays, view)
+        with ``view`` holding only ``fn``'s sealed txs, arrival order."""
+        if self.state_arrays is None:
+            from repro.core.state import StateArrays
+            self.state_arrays = StateArrays()
+        self._state_handlers[self.fns.id(fn)] = handler
+
+    def state_root(self) -> str:
+        return self.state_arrays.root() if self.state_arrays is not None \
+            else ""
+
+    def _apply_state(self, txs: "TxArrays"):
+        for fid, h in self._state_handlers.items():
+            m = txs.fn_id == fid
+            if m.any():
+                h(self.state_arrays,
+                  TxArrays(txs.submit_time[m], txs.gas[m], txs.fn_id[m],
+                           txs.sender_id[m], self.fns))
 
     def submit(self, tx):
         """Object-Tx compatibility shim."""
@@ -437,6 +490,10 @@ class VectorRollup:
                         np.concatenate([b.sender_id for b in self._pending]),
                         self.fns))
         self._pending, self._pending_n = [], 0
+        if self._state_handlers:
+            # execute against the SoA account state in arrival order —
+            # shard/lane layout must not change the committed state
+            self._apply_state(txs)
         n = len(txs)
         idx = np.arange(n)
         lane = idx % self.n_lanes
@@ -461,12 +518,12 @@ class VectorRollup:
         commit = (counts > 0) @ base + counts @ percall
         n_txs = counts.sum(axis=1)
         now = np.maximum.reduceat(t_o, starts)
-        # per-batch xor-roots over the interleaved word buffer
+        # per-batch xor-roots over the interleaved word buffer (the same
+        # fold family as xor_fold_digest, segmented per batch)
         words = TxArrays(t_o, txs.gas[order], fn_o, txs.sender_id[order],
                          self.fns).word_buffer()
-        mixed = (words ^ (words >> np.uint32(16))) * DIGEST_MULT
-        roots = np.bitwise_xor.reduceat(mixed, starts * 4)
-        self.batch_digests.extend(int(DIGEST_SEED ^ r) for r in roots)
+        roots = xor_fold_digest_segments(words, starts * 4)
+        self.batch_digests.extend(int(r) for r in roots)
         # merged update-buffer digest through the kernel path
         self.update_digest = pallas_or_numpy_digest(words,
                                                     self.digest_backend)
@@ -493,7 +550,7 @@ class VectorRollup:
         return nb
 
     def _l1_submit(self, batch: TxArrays):
-        if hasattr(self.l1, "submit_arrays"):
+        if getattr(self.l1, "soa_native", False):
             self.l1.submit_arrays(batch)
         else:                                   # object Chain fallback
             from repro.core.ledger import Tx

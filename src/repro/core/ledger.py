@@ -12,7 +12,8 @@ import dataclasses
 import hashlib
 import json
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -20,6 +21,122 @@ from repro.core.gas import DEFAULT_GAS, GasTable
 
 ROLES = ("admin", "task_publisher", "trainer", "evaluator", "aggregator",
          "validator", "oracle")
+
+
+@runtime_checkable
+class LedgerBackend(Protocol):
+    """The one surface all four ledger faces share.
+
+    ``Chain``/``Rollup`` (object path, this module + core/rollup.py) and
+    ``VectorChain``/``VectorRollup`` (SoA path, core/engine.py) — plus the
+    sharded fabric (core/shards.py) — all satisfy this protocol, so
+    protocol code (fl/server.py, fl/scheduler.py) is written once:
+
+      * ``submit(tx)`` / ``submit_arrays(batch)`` — object-Tx and SoA
+        ingestion (the object faces lift ``TxArrays`` row-by-row; the SoA
+        faces lift single ``Tx`` objects through a shim).
+      * ``sender_id(name)`` — the backend's stable sender namespace;
+        account ids index ``StateArrays`` rows directly.
+      * ``register_state(fn, handler)`` — attach a handler written against
+        ``(StateArrays, TxArrays-view)``; each backend adapts its own
+        execution granularity (per block, per batch, or per tx — the
+        object path is a thin 1-row-view adapter), with the view holding
+        only the registered function's transactions in confirmation order.
+      * ``state_root()`` — the chunked array-native commitment over the
+        attached ``StateArrays`` (core/state.py), or "" when no SoA state
+        is attached.
+    """
+
+    def submit(self, tx) -> None: ...
+    def submit_arrays(self, batch) -> None: ...
+    def sender_id(self, sender: str) -> int: ...
+    def register_state(self, fn: str, handler: Callable) -> None: ...
+    def state_root(self) -> str: ...
+
+
+def lift_tx_rows(txs, fns, sender_ids: List[int]):
+    """Object->SoA adapter: one ``TxArrays`` over object ``Tx`` rows, with
+    sender ids resolved in the TARGET's namespace (``TxArrays.from_txs``
+    would mint a private namespace and misalign ``StateArrays`` rows)."""
+    from repro.core.engine import TxArrays
+    return TxArrays(
+        np.array([t.submit_time for t in txs], np.float64),
+        np.array([t.gas for t in txs], np.int64),
+        np.array([fns.id(t.fn) for t in txs], np.int32),
+        np.array(sender_ids, np.int32), fns)
+
+
+class ObjectLedgerFace:
+    """Shared object-face LedgerBackend plumbing for ``Chain`` and
+    ``rollup.Rollup``: ONE sender/account namespace, the id-pinning
+    SoA-lowering adapter, and the StateArrays handler bootstrap — the
+    invariants live here exactly once, so the two faces cannot diverge.
+
+    Subclasses provide ``submit(tx)`` and call ``_init_object_face()``
+    from ``__init__``."""
+
+    def _init_object_face(self):
+        # SoA state + handlers written once against (StateArrays,
+        # TxArrays-view); the object faces are thin adapters that lift
+        # each executed/confirmed Tx into a 1-row view.
+        self.state_arrays = None
+        self._state_handlers: Dict[str, Callable] = {}
+        self._sender_ids: Dict[str, int] = {}
+        self._sender_names: Dict[int, str] = {}
+
+    def sender_id(self, sender: str) -> int:
+        """Stable sender-name -> id mapping (StateArrays row index)."""
+        sid = self._sender_ids.setdefault(sender, len(self._sender_ids))
+        self._sender_names.setdefault(sid, sender)
+        return sid
+
+    def _sender_name(self, sid: int) -> str:
+        """Reverse id -> name, PINNING unknown ids so that a later
+        ``sender_id`` round-trips to the same id — lowering a SoA batch
+        must not re-mint ids or state handlers would scatter to the wrong
+        StateArrays rows (same-root-on-every-face contract)."""
+        name = self._sender_names.get(sid)
+        if name is None:
+            name = f"__acct{sid}"
+            assert self._sender_ids.setdefault(name, sid) == sid
+            self._sender_names[sid] = name
+        return name
+
+    def register_state(self, fn: str, handler: Callable):
+        """Attach a StateArrays handler (see LedgerBackend).  Lazily
+        creates the SoA state on first registration."""
+        if self.state_arrays is None:
+            from repro.core.state import StateArrays
+            self.state_arrays = StateArrays()
+        self._state_handlers[fn] = handler
+
+    def state_root(self) -> str:
+        return self.state_arrays.root() if self.state_arrays is not None \
+            else ""
+
+    def _state_fns(self):
+        from repro.core.engine import FnRegistry
+        if not hasattr(self, "_fns_cache"):
+            self._fns_cache = FnRegistry()
+        return self._fns_cache
+
+    def _apply_state_tx(self, tx: Tx):
+        """1-row-view adapter: run the fn's StateArrays handler for one
+        executed/confirmed object Tx."""
+        handler = self._state_handlers.get(tx.fn)
+        if handler is not None:
+            handler(self.state_arrays,
+                    lift_tx_rows([tx], self._state_fns(),
+                                 [self.sender_id(tx.sender)]))
+
+    def submit_arrays(self, batch):
+        """SoA ingestion adapter: lower a TxArrays batch to object txs
+        (small-N only — the vector engine is the path at scale).  Sender
+        ids are preserved, not re-minted (see ``_sender_name``)."""
+        for i in range(len(batch)):
+            self.submit(Tx(batch.fns.names[batch.fn_id[i]],
+                           self._sender_name(int(batch.sender_id[i])), {},
+                           int(batch.gas[i]), float(batch.submit_time[i])))
 
 
 @dataclasses.dataclass
@@ -84,8 +201,16 @@ class AccessControl:
         self.roles.pop(user, None)
 
     def vote_readmit(self, admin: str, user: str) -> bool:
-        """Whitewashing guard: majority admin vote to re-admit."""
+        """Whitewashing guard: majority admin vote to re-admit.
+
+        Self-votes are rejected: a banned admin (ban removes roles but not
+        consortium membership) must not count toward their own quorum.
+        Votes are a set per user, so double-voting is idempotent; the
+        quorum is a strict majority (2-of-3 passes, 2-of-4 does not).
+        """
         assert admin in self.admins
+        if admin == user:
+            raise PermissionError("self-readmission vote rejected")
         self._votes.setdefault(user, set()).add(admin)
         if len(self._votes[user]) * 2 > len(self.admins):
             self.banned.discard(user)
@@ -94,7 +219,7 @@ class AccessControl:
         return False
 
 
-class Chain:
+class Chain(ObjectLedgerFace):
     """Gas-limited block production with a QBFT-style quorum check."""
 
     def __init__(self, n_validators: int = 4, block_time: float = 1.0,
@@ -110,6 +235,7 @@ class Chain:
         self.state: Dict[str, Any] = {}
         self._handlers: Dict[str, Callable] = {}
         self.total_gas = 0
+        self._init_object_face()
 
     # -- contract surface ------------------------------------------------------
     def register(self, fn: str, handler: Callable):
@@ -144,6 +270,8 @@ class Chain:
             handler = self._handlers.get(tx.fn)
             if handler is not None:
                 handler(self.state, tx)
+            if self._state_handlers:
+                self._apply_state_tx(tx)
             tx.confirm_time = now
             txs.append(tx)
             gas_used += tx.gas

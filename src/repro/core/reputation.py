@@ -228,6 +228,17 @@ def end_of_multitask_update(book: TrainerBook,
     return _multitask_scan(book, *xs, params)
 
 
+def sync_book_to_state(book: TrainerBook, state, account_ids) -> None:
+    """Scatter the on-chain reputation record into the array-native L2
+    account state (core/state.py StateArrays) — the cross-shard settlement
+    write fl/server.py performs at end-of-window.  ``account_ids[i]`` is
+    the ledger sender id (StateArrays row) of trainer i."""
+    import numpy as np
+    ids = np.asarray(account_ids, np.int64)
+    state.ensure_ids(ids)
+    state.reputation[ids] = np.asarray(book.reputation, np.float32)
+
+
 def init_book(n: int, history: int = 16,
               params: ReputationParams = ReputationParams()) -> TrainerBook:
     return TrainerBook(

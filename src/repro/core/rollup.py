@@ -13,24 +13,47 @@ transaction; batch locally, post one verified summary"):
    accumulate on-device ("off-chain"), then ONE reputation-weighted
    all-reduce (Eq. 1) + digest crosses the pod interconnect ("commit").
    Collective bytes drop ~H-fold — the gas story, re-materialised on ICI.
+
+At scale the single sequencer saturates; the **sharded rollup fabric**
+(core/shards.py `ShardedRollup`) runs K `VectorRollup` shards — each with
+its own sequencer lanes and its own partition of the array-native account
+state (core/state.py `StateArrays`) — all settling to ONE shared L1.  At
+window boundaries each shard's partition root is merged into a *fabric
+root* committing the whole fleet's state; the flat array state root itself
+is shard-count invariant, so the same transactions commit to the same
+state no matter how they were sharded.
+
+Security caveat: every root in this simulator — `state_digest`, the batch
+`word_digest`, the chunked `StateArrays` root and the fabric root — is a
+validity *stand-in*, not a zk proof.  The digests are deterministic and
+tamper-evident (replaying the batch from `pre_root` must reach
+`post_root`), which is the soundness condition a zk-SNARK would prove
+succinctly; no cryptographic succinctness or zero-knowledge property is
+claimed.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import json
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable, l2_gas
-from repro.core.ledger import Chain, Tx
+from repro.core.ledger import Chain, ObjectLedgerFace, Tx
+from repro.core.state import canonical_bytes
 
 
 def state_digest(state: Dict[str, Any]) -> str:
-    """Deterministic state-root stand-in (content hash of the L2 state)."""
-    blob = json.dumps(state, sort_keys=True, default=repr).encode()
-    return hashlib.sha256(blob).hexdigest()[:32]
+    """Deterministic state-root stand-in (content hash of the L2 state).
+
+    Built on ``core.state.canonical_bytes``: the old
+    ``json.dumps(..., default=repr)`` fallback truncated ndarray reprs
+    (two different 2000-element arrays share a repr, hence shared a
+    digest) and collapsed dataclasses to their repr; the canonical
+    encoding is total, type-tagged and collision-resistant
+    (tests/test_state.py pins the regression)."""
+    return hashlib.sha256(canonical_bytes(state)).hexdigest()[:32]
 
 
 @dataclasses.dataclass
@@ -55,7 +78,7 @@ class BatchProof:
         return state_digest(replay(pre_state)) == self.post_root
 
 
-class Rollup:
+class Rollup(ObjectLedgerFace):
     """L2 sequencer + prover + L1 settlement."""
 
     def __init__(self, l1: Chain, batch_size: int = ROLLUP_BATCH,
@@ -68,6 +91,10 @@ class Rollup:
         self.per_tx_time = per_tx_time    # sequencer execution latency (s)
         self.state: Dict[str, Any] = {}
         self._handlers: Dict[str, Callable] = {}
+        # LedgerBackend face: sender namespace, SoA-lowering adapter and
+        # StateArrays handler plumbing shared with Chain (one copy of the
+        # id-pinning invariant — see ledger.ObjectLedgerFace)
+        self._init_object_face()
         self.pending: List[Tx] = []
         self.batches: List[BatchProof] = []
         self.gas_log: List[Dict[str, Any]] = []
@@ -92,11 +119,24 @@ class Rollup:
             self.seal_batch()
 
     def _execute(self, state: Dict[str, Any], txs: List[Tx]) -> Dict[str, Any]:
+        # PURE (state, txs) -> state replay: BatchProof.verify's soundness
+        # story replays batches through this function, so it must not
+        # touch the live StateArrays (those handlers run in seal_batch)
         for tx in txs:
             handler = self._handlers.get(tx.fn)
             if handler is not None:
                 handler(state, tx)
         return state
+
+    def seal(self) -> int:
+        """Seal every pending tx (LedgerBackend face shared with
+        VectorRollup.seal / ShardedRollup.seal); returns #batches."""
+        nb = 0
+        while self.pending:
+            if self.seal_batch() is None:
+                break
+            nb += 1
+        return nb
 
     def seal_batch(self) -> Optional[BatchProof]:
         if not self.pending or self._sealing:
@@ -111,6 +151,12 @@ class Rollup:
                 self.pending[self.batch_size:]
             pre_root = state_digest(self.state)
             self.state = self._execute(self.state, txs)
+            if self._state_handlers:
+                # SoA state handlers run at seal time, OUTSIDE the pure
+                # replay function (1-row views, same handler code as the
+                # vector/sharded faces)
+                for tx in txs:
+                    self._apply_state_tx(tx)
             post_root = state_digest(self.state)
             tx_root = hashlib.sha256(
                 "".join(t.tx_id for t in txs).encode()).hexdigest()[:32]

@@ -1,0 +1,355 @@
+"""Array-native L2 account state + chunked state commitment.
+
+The rollup's L2 state used to be a free-form ``Dict[str, Any]`` digested
+with ``json.dumps(..., default=repr)`` — slow, schema-less and
+collision-prone (ndarray ``repr`` truncates, so two different large arrays
+could share a digest).  This module replaces it with
+
+  * ``canonical_bytes`` — a total, type-tagged byte encoding for the values
+    the ledger actually stores (scalars, strings, ndarrays, dataclasses,
+    nested containers).  Used by ``rollup.state_digest`` so dict-state
+    digests stay available for the object path, now collision-resistant.
+  * ``StateArrays`` — a fixed-schema structure-of-arrays account state
+    (balances, stake, reputation, task counters) indexed by the ledger's
+    integer sender ids.  Handlers are written ONCE against ``StateArrays``
+    + a ``TxArrays`` view (see ledger.LedgerBackend); the object path lifts
+    single transactions into 1-row views.
+  * a chunked Merkle-style commitment: the state's canonical u32 word
+    buffer is split into fixed-size chunks, each chunk folded with the same
+    xor-mix as the Pallas ``rollup_digest`` kernel (``chunk_fold_digests``
+    is the bit-exact NumPy mirror of ``kernels.rollup_digest.
+    rollup_chunk_digests`` — pinned by tests/test_state.py), and the chunk
+    digest vector is sealed with one sha256.  Chunking is independent of
+    the shard count, so the same transactions produce the same root no
+    matter how many shards executed them (core/shards.py).
+
+Security note: like every digest in this simulator, the root is a validity
+*stand-in* for a zk proof — deterministic and tamper-evident, but not a
+cryptographic succinctness/soundness claim (see core/rollup.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+# Mixing constants shared with core/engine.py and kernels/rollup_digest.py.
+MIX_MULT = np.uint32(0x85EBCA6B)
+MIX_SEED = np.uint32(0x9E3779B9)
+
+# chunk size (u32 words) of the state commitment; lane-aligned for the
+# Pallas path (kernels.rollup_digest.rollup_chunk_digests needs % 128 == 0)
+STATE_CHUNK_WORDS = 2048
+
+
+class Registry:
+    """Stable name <-> integer-id mapping (append-only, insertion order).
+
+    The generic form of the engine's ``FnRegistry``; also used for account
+    namespaces.  Ids are dense and never reused, so they index SoA arrays.
+    """
+
+    def __init__(self, names: Sequence[str] = ()):
+        self.names: List[str] = []
+        self._ids: Dict[str, int] = {}
+        for n in names:
+            self.id(n)
+
+    def id(self, name: str) -> int:
+        i = self._ids.get(name)
+        if i is None:
+            i = len(self.names)
+            self._ids[name] = i
+            self.names.append(name)
+        return i
+
+    def get(self, name: str) -> Optional[int]:
+        return self._ids.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._ids
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def account_owner(account_ids, n_shards: int) -> np.ndarray:
+    """Shard ownership of account ids: xor-mix of the id mod K.
+
+    THE one partition function: core/shards.py routes transactions with it
+    and ``StateArrays.partition_root`` commits rows with it, so a sender's
+    txs always execute on the shard whose partition root covers its
+    account rows.  Deterministic across runs/processes (no ``hash`` salt).
+    """
+    s = np.asarray(account_ids, np.uint32)
+    mixed = (s ^ (s >> np.uint32(16))) * MIX_MULT
+    return (mixed % np.uint32(n_shards)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# canonical byte encoding (satellite of the dict-state digest fix)
+# ---------------------------------------------------------------------------
+def canonical_bytes(obj: Any) -> bytes:
+    """Total, deterministic, type-tagged encoding of a state value.
+
+    Every encoding is prefixed with a one-byte type tag and, where the
+    payload is variable-length, a length header — so values of different
+    types or shapes can never collide byte-wise.  ndarrays encode dtype,
+    shape and the FULL buffer (``repr`` truncates at ~1000 elements, which
+    is the collision the old ``json.dumps(..., default=repr)`` fallback
+    had); dataclasses encode their field names and values recursively.
+    """
+    if obj is None:
+        return b"N"
+    if isinstance(obj, bool):                       # before int (bool is int)
+        return b"B1" if obj else b"B0"
+    if isinstance(obj, (int, np.integer)):
+        b = str(int(obj)).encode()
+        return b"I" + len(b).to_bytes(4, "big") + b
+    if isinstance(obj, (float, np.floating)):
+        # bit pattern, not repr: -0.0 vs 0.0 and precision stay distinct
+        return b"F" + np.float64(obj).tobytes()
+    if isinstance(obj, str):
+        b = obj.encode()
+        return b"S" + len(b).to_bytes(4, "big") + b
+    if isinstance(obj, (bytes, bytearray)):
+        return b"Y" + len(obj).to_bytes(4, "big") + bytes(obj)
+    if isinstance(obj, np.ndarray):
+        if obj.dtype == object:
+            # object arrays hold PyObject POINTERS — tobytes() would be
+            # process-random; encode shape + elements recursively instead
+            head = str(obj.shape).encode()
+            body = b"".join(canonical_bytes(v) for v in obj.ravel())
+            return (b"P" + len(head).to_bytes(4, "big") + head
+                    + len(body).to_bytes(8, "big") + body)
+        a = np.ascontiguousarray(obj)
+        head = repr(a.dtype.str).encode() + str(a.shape).encode()
+        return (b"A" + len(head).to_bytes(4, "big") + head
+                + len(a.tobytes()).to_bytes(8, "big") + a.tobytes())
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        items = [(f.name, getattr(obj, f.name))
+                 for f in dataclasses.fields(obj)]
+        body = b"".join(canonical_bytes(k) + canonical_bytes(v)
+                        for k, v in items)
+        name = type(obj).__name__.encode()
+        return (b"C" + len(name).to_bytes(4, "big") + name
+                + len(body).to_bytes(8, "big") + body)
+    if isinstance(obj, dict):
+        enc = sorted((canonical_bytes(k), canonical_bytes(v))
+                     for k, v in obj.items())
+        body = b"".join(k + v for k, v in enc)
+        return b"D" + len(body).to_bytes(8, "big") + body
+    if isinstance(obj, (list, tuple)):
+        body = b"".join(canonical_bytes(v) for v in obj)
+        tag = b"L" if isinstance(obj, list) else b"T"
+        return tag + len(body).to_bytes(8, "big") + body
+    if isinstance(obj, (set, frozenset)):
+        body = b"".join(sorted(canonical_bytes(v) for v in obj))
+        return b"E" + len(body).to_bytes(8, "big") + body
+    # last resort: repr, tagged so it cannot collide with structured forms
+    b = repr(obj).encode()
+    return b"R" + len(b).to_bytes(4, "big") + b
+
+
+# ---------------------------------------------------------------------------
+# chunked xor-mix commitment (NumPy mirror of the Pallas chunk kernel)
+# ---------------------------------------------------------------------------
+def chunk_fold_digests(words: np.ndarray,
+                       chunk: int = STATE_CHUNK_WORDS) -> np.ndarray:
+    """Per-chunk xor-mix digests: (P,) u32 -> (ceil(P/chunk),) u32.
+
+    Bit-exact NumPy mirror of ``kernels.rollup_digest.rollup_chunk_digests``
+    (pinned by tests/test_state.py).  Zero padding folds away (zero words
+    mix to zero), matching the kernel's padded tail chunk.
+    """
+    w = np.ascontiguousarray(words, dtype=np.uint32)
+    if w.size == 0:
+        return np.array([MIX_SEED], np.uint32)
+    pad = (-w.size) % chunk
+    if pad:
+        w = np.concatenate([w, np.zeros(pad, np.uint32)])
+    mixed = (w ^ (w >> np.uint32(16))) * MIX_MULT
+    return MIX_SEED ^ np.bitwise_xor.reduce(mixed.reshape(-1, chunk), axis=1)
+
+
+def chunked_root(words: np.ndarray, chunk: int = STATE_CHUNK_WORDS,
+                 backend: str = "auto", header: bytes = b"") -> str:
+    """Two-level commitment: per-chunk xor-mix digests (Pallas kernel on
+    TPU, NumPy mirror elsewhere), sealed with one sha256 over the chunk
+    digest vector + a schema/length header.  Returns a 32-hex root."""
+    if backend == "numpy":
+        digests = chunk_fold_digests(words, chunk)
+    else:
+        use_pallas = False
+        if backend in ("auto", "pallas"):
+            try:
+                import jax
+                use_pallas = (backend == "pallas"
+                              or jax.default_backend() == "tpu")
+            except Exception:  # pragma: no cover - jax is always in-tree
+                use_pallas = False
+        if use_pallas and len(words):
+            import jax.numpy as jnp
+            from repro.kernels.rollup_digest import rollup_chunk_digests
+            digests = np.asarray(rollup_chunk_digests(
+                jnp.asarray(np.ascontiguousarray(words, np.uint32)),
+                chunk_p=chunk))
+        else:
+            digests = chunk_fold_digests(words, chunk)
+    h = hashlib.sha256()
+    h.update(header)
+    h.update(np.uint64(len(words)).tobytes())
+    h.update(np.ascontiguousarray(digests, np.uint32).tobytes())
+    return h.hexdigest()[:32]
+
+
+# ---------------------------------------------------------------------------
+# fixed-schema SoA account state
+# ---------------------------------------------------------------------------
+# (name, dtype) in commitment order — the schema IS part of the root header.
+STATE_SCHEMA = (
+    ("balances", np.float64),         # escrow-visible token balance
+    ("stake", np.float64),            # locked collateral
+    ("reputation", np.float32),       # R_i (Eq. 9-10), synced at settlement
+    ("tasks_published", np.int64),    # publishTask count per account
+    ("submissions", np.int64),        # submitLocalModel count per account
+    ("rep_events", np.int64),         # calculate*Rep count per account
+)
+
+
+class StateArrays:
+    """Fixed-schema SoA account state, indexed by ledger sender ids.
+
+    Rows are accounts; the row index is the owning ledger's integer sender
+    id (``LedgerBackend.sender_id``), so state handlers can scatter straight
+    from a ``TxArrays`` view without any name lookups.  Arrays grow
+    geometrically; only the filled prefix (``n``) is committed.
+
+    Handler contract (see ledger.LedgerBackend.register_state): a handler
+    is ``handler(state: StateArrays, txs: TxArrays-view)`` where the view
+    holds ONLY the registered function's transactions, in confirmation
+    order.  Handlers used under core/shards.py must be per-account
+    commutative (counter/accumulator updates), so the merged state is
+    independent of how transactions were partitioned across shards.
+    """
+
+    def __init__(self, n_accounts: int = 0):
+        self.n = 0
+        cap = max(64, n_accounts)
+        for name, dtype in STATE_SCHEMA:
+            setattr(self, name, np.zeros(cap, dtype))
+        if n_accounts:
+            self.ensure(n_accounts)
+
+    @property
+    def capacity(self) -> int:
+        return self.balances.shape[0]
+
+    def ensure(self, n_accounts: int) -> None:
+        """Grow the filled prefix to cover account ids < ``n_accounts``."""
+        if n_accounts <= self.n:
+            return
+        if n_accounts > self.capacity:
+            cap = max(n_accounts, 2 * self.capacity)
+            for name, dtype in STATE_SCHEMA:
+                old = getattr(self, name)
+                new = np.zeros(cap, dtype)
+                new[: self.n] = old[: self.n]
+                setattr(self, name, new)
+        self.n = n_accounts
+
+    def ensure_ids(self, ids: np.ndarray) -> None:
+        if len(ids):
+            self.ensure(int(np.max(ids)) + 1)
+
+    # -- commitment ------------------------------------------------------------
+    def word_buffer(self) -> np.ndarray:
+        """Canonical u32 word encoding of the filled prefix, schema order."""
+        parts = []
+        for name, _ in STATE_SCHEMA:
+            a = np.ascontiguousarray(getattr(self, name)[: self.n])
+            parts.append(a.view(np.uint8))
+        blob = (np.concatenate(parts) if parts else
+                np.zeros(0, np.uint8))
+        pad = (-blob.size) % 4
+        if pad:
+            blob = np.concatenate([blob, np.zeros(pad, np.uint8)])
+        return blob.view(np.uint32)
+
+    def schema_header(self) -> bytes:
+        return ";".join(f"{name}:{np.dtype(dt).str}"
+                        for name, dt in STATE_SCHEMA).encode()
+
+    def root(self, chunk: int = STATE_CHUNK_WORDS,
+             backend: str = "auto") -> str:
+        """Chunked Merkle-style state root (shard-count independent)."""
+        return chunked_root(self.word_buffer(), chunk, backend,
+                            header=self.schema_header())
+
+    def _rows_words(self, idx: np.ndarray) -> np.ndarray:
+        """Canonical u32 words over the selected rows, schema order."""
+        parts = []
+        for name, _ in STATE_SCHEMA:
+            parts.append(np.ascontiguousarray(
+                getattr(self, name)[idx]).view(np.uint8))
+        blob = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
+        pad = (-blob.size) % 4
+        if pad:
+            blob = np.concatenate([blob, np.zeros(pad, np.uint8)])
+        return blob.view(np.uint32)
+
+    def partition_roots(self, n_shards: int,
+                        chunk: int = STATE_CHUNK_WORDS,
+                        backend: str = "auto") -> List[str]:
+        """All K per-shard roots in ONE ``account_owner`` pass.  Ownership
+        is the same partition function hash routing uses — the shard that
+        sequenced an account's txs is the shard whose root commits it.
+
+        These are the per-shard commitments merged into the fabric root
+        (core/shards.py); unlike ``root()`` they depend on the partition.
+        """
+        owner = account_owner(np.arange(self.n), n_shards)
+        return [chunked_root(self._rows_words(np.flatnonzero(owner == k)),
+                             chunk, backend,
+                             self.schema_header()
+                             + f"|shard={k}/{n_shards}".encode())
+                for k in range(n_shards)]
+
+    def partition_root(self, shard: int, n_shards: int,
+                       chunk: int = STATE_CHUNK_WORDS,
+                       backend: str = "auto") -> str:
+        """Single-shard form of ``partition_roots``."""
+        return self.partition_roots(n_shards, chunk, backend)[shard]
+
+    def copy(self) -> "StateArrays":
+        out = StateArrays()
+        out.ensure(self.n)
+        for name, _ in STATE_SCHEMA:
+            getattr(out, name)[: self.n] = getattr(self, name)[: self.n]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# default protocol state handlers (written once, run on every ledger face)
+# ---------------------------------------------------------------------------
+def _counter_handler(field: str):
+    def handler(state: StateArrays, txs) -> None:
+        state.ensure_ids(txs.sender_id)
+        np.add.at(getattr(state, field), txs.sender_id, 1)
+    return handler
+
+
+def default_state_handlers() -> Dict[str, Any]:
+    """{fn: handler} for the Table-I protocol functions.
+
+    Pure per-account accumulators — commutative, hence shard-count
+    invariant (the core/shards.py handler contract).
+    """
+    return {
+        "publishTask": _counter_handler("tasks_published"),
+        "submitLocalModel": _counter_handler("submissions"),
+        "calculateObjectiveRep": _counter_handler("rep_events"),
+        "calculateSubjectiveRep": _counter_handler("rep_events"),
+    }

@@ -66,6 +66,12 @@ class TaskRuntime:
         self.reward = reward
         self.n_select = n_select
         self.init_seed = init_seed
+        # sharded fabric (core/shards.py): pin every emission of this task
+        # to one shard — hash or least-loaded, decided at task creation
+        rollup = getattr(node, "rollup", None)
+        self.shard: Optional[int] = (rollup.assign_task(task_id)
+                                     if hasattr(rollup, "assign_task")
+                                     else None)
         self.phase = "select"
         self.rnd = 0
         self.start_window = 0
@@ -83,18 +89,24 @@ class TaskRuntime:
 
     # -- lifecycle -------------------------------------------------------------
     def step(self):
-        if self.phase == "select":
-            self._select()
-            self.phase = "round"
-            if self.rounds == 0:
-                self._finalize()
-        elif self.phase == "round":
-            self._round()
-            if self.rnd >= self.rounds:
-                self._finalize()
-        else:
-            raise RuntimeError(f"step() in phase {self.phase!r} "
-                               f"(task {self.task_id})")
+        # every protocol tx emitted while this task steps is routed to the
+        # task's shard (no-op when the L2 target is not a sharded fabric)
+        self.node._route_shard = self.shard
+        try:
+            if self.phase == "select":
+                self._select()
+                self.phase = "round"
+                if self.rounds == 0:
+                    self._finalize()
+            elif self.phase == "round":
+                self._round()
+                if self.rnd >= self.rounds:
+                    self._finalize()
+            else:
+                raise RuntimeError(f"step() in phase {self.phase!r} "
+                                   f"(task {self.task_id})")
+        finally:
+            self.node._route_shard = None
 
     # steps 1-2: publish + reputation-ranked selection --------------------------
     def _select(self):
@@ -204,16 +216,11 @@ class Scheduler:
         return rt
 
     def _seal_rollup(self):
-        """Seal every pending rollup tx on either engine: VectorRollup
-        seals all lanes in one ``seal()``; the object ``Rollup`` only
-        exposes per-batch ``seal_batch()``, so drain it."""
-        r = self.node.rollup
-        if hasattr(r, "seal"):
-            r.seal()
-        else:
-            while r.pending:
-                if r.seal_batch() is None:
-                    break
+        """Seal every pending rollup tx: all LedgerBackend rollup faces
+        (object Rollup, VectorRollup, ShardedRollup) expose ``seal()``;
+        the sharded fabric also records its fabric root here — this call
+        IS the window-boundary commitment."""
+        self.node.rollup.seal()
 
     def _submit_background(self, t_end: float):
         if self.background is None:
@@ -224,7 +231,7 @@ class Scheduler:
         if j <= i:
             return
         chain = self.node.chain
-        if hasattr(chain, "submit_arrays"):
+        if getattr(chain, "soa_native", False):
             from repro.core.engine import TxArrays
             # remap raw workload sender ids into the chain's namespace
             # (the same "client<k>" actors the object engine sees) — raw

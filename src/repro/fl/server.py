@@ -20,8 +20,10 @@ from repro.core.gas import DEFAULT_GAS
 from repro.core.ledger import AccessControl, Chain, Tx
 from repro.core.oracle import DONConfig, ValidationSlices
 from repro.core.reputation import (ReputationParams, TrainerBook,
-                                   end_of_multitask_update, init_book)
+                                   end_of_multitask_update, init_book,
+                                   sync_book_to_state)
 from repro.core.rollup import Rollup
+from repro.core.state import default_state_handlers
 from repro.core.storage import BlobStore
 from repro.core.tasks import TaskContract
 
@@ -44,7 +46,8 @@ class AutoDFL:
                  don: DONConfig = DONConfig(), use_rollup: bool = True,
                  use_pallas_agg: bool = False, seed: int = 0,
                  engine: str = "object", trainer_funds: float = 10.0,
-                 publisher_funds: float = 1000.0):
+                 publisher_funds: float = 1000.0, n_shards: int = 1,
+                 shard_route: str = "hash"):
         self.model = model
         self.opt = opt
         self.eval_fn = eval_fn
@@ -64,9 +67,19 @@ class AutoDFL:
         if engine == "vector":
             from repro.core.engine import VectorChain, VectorRollup
             self.chain = VectorChain()
-            self.rollup = VectorRollup(self.chain) if use_rollup else None
+            if not use_rollup:
+                self.rollup = None
+            elif n_shards > 1:
+                # sharded rollup fabric (core/shards.py): K sequencers
+                # over the one shared L1, task/hash routing, fabric root
+                from repro.core.shards import ShardedRollup
+                self.rollup = ShardedRollup(self.chain, n_shards=n_shards,
+                                            route=shard_route)
+            else:
+                self.rollup = VectorRollup(self.chain)
         else:
             assert engine == "object", f"unknown engine {engine!r}"
+            assert n_shards == 1, "sharding needs engine='vector'"
             self.chain = Chain()
             self.rollup = Rollup(self.chain) if use_rollup else None
         self.book: TrainerBook = init_book(n_trainers)
@@ -79,6 +92,14 @@ class AutoDFL:
         self.acl.grant("admin0", self.publisher, "task_publisher")
         self.escrow.fund(self.publisher, publisher_funds)
         self._clock = 0.0
+        # task-shard pin for the CURRENT emission (set by TaskRuntime.step
+        # / settle_window when the L2 target is a ShardedRollup)
+        self._route_shard: Optional[int] = None
+        # array-native L2 account state (core/state.py): handlers written
+        # once against StateArrays views run on every ledger face; rows
+        # are indexed by the target's sender ids
+        self.state_arrays = None
+        self._wire_state()
         # protocol traffic accounting (the bench_protocol TPS numerator)
         self.protocol_calls: Dict[str, int] = {}
         # invoked with the current clock before every protocol emission;
@@ -92,6 +113,42 @@ class AutoDFL:
     # -- ledger helpers -----------------------------------------------------------
     def _target(self):
         return self.rollup if self.rollup is not None else self.chain
+
+    def _wire_state(self) -> None:
+        """Attach the fixed-schema SoA account state + the default
+        protocol counters to the L2 target (idempotent; tests that swap
+        ``self.rollup`` for a ShardedRollup re-invoke it)."""
+        target = self._target()
+        if not hasattr(target, "register_state"):
+            return
+        for fn, handler in default_state_handlers().items():
+            target.register_state(fn, handler)
+        # the fabric keeps its StateArrays in ``state``; the single-rollup
+        # faces in ``state_arrays`` (``state`` is their L2 dict there)
+        from repro.core.state import StateArrays
+        st = getattr(target, "state", None)
+        self.state_arrays = st if isinstance(st, StateArrays) \
+            else target.state_arrays
+
+    def _sync_fabric_state(self) -> None:
+        """Cross-shard end-of-window settlement: scatter the reputation
+        book and escrow balances/stake into the fabric's StateArrays.
+        These rows span every shard partition — the fabric root sealed at
+        the next window boundary commits the merged result."""
+        state = self.state_arrays
+        if state is None:
+            return
+        target = self._target()
+        ids = np.array([target.sender_id(t) for t in self.trainer_ids],
+                       np.int64)
+        sync_book_to_state(self.book, state, ids)
+        state.balances[ids] = [self.escrow.balances.get(t, 0.0)
+                               for t in self.trainer_ids]
+        locked = {}
+        for per_task in self.escrow.collateral.values():
+            for who, amount in per_task.items():
+                locked[who] = locked.get(who, 0.0) + amount
+        state.stake[ids] = [locked.get(t, 0.0) for t in self.trainer_ids]
 
     def _tx(self, fn: str, sender: str, payload: Dict):
         self._tx_batch(fn, [sender], [payload])
@@ -111,7 +168,7 @@ class AutoDFL:
         gas = DEFAULT_GAS.l1_per_call.get(fn, 30000)
         times = self._clock + 0.01 * np.arange(1, n + 1)
         self._clock += 0.01 * n
-        if hasattr(target, "submit_arrays"):
+        if getattr(target, "soa_native", False):
             from repro.core.engine import TxArrays
             # ids MUST come from the target's own namespace: _tx's submit
             # shim registers senders there, and mixing the chain's counter
@@ -119,9 +176,14 @@ class AutoDFL:
             sender_ids = np.array(
                 [target.sender_id(s) for s in senders], np.int32)
             fid = target.fns.id(fn)
-            target.submit_arrays(TxArrays(
-                times, np.full(n, gas, np.int64),
-                np.full(n, fid, np.int32), sender_ids, target.fns))
+            batch = TxArrays(times, np.full(n, gas, np.int64),
+                             np.full(n, fid, np.int32), sender_ids,
+                             target.fns)
+            if self._route_shard is not None and hasattr(target, "shards"):
+                # task-pinned shard routing (core/shards.py fabric)
+                target.submit_arrays(batch, shard=self._route_shard)
+            else:
+                target.submit_arrays(batch)
         else:
             if callable(payloads):
                 payloads = payloads()
@@ -149,10 +211,15 @@ class AutoDFL:
         reputations = np.asarray(self.book.reputation)
         s_rep = np.asarray(diags["s_rep"])
         for k, rt in enumerate(runtimes):
-            self._tx_batch("calculateSubjectiveRep",
-                           [self.trainer_ids[i] for i in rt.sel_idx],
-                           lambda k=k, rt=rt: [{"value": float(s_rep[k, i])}
-                                               for i in rt.sel_idx])
+            self._route_shard = getattr(rt, "shard", None)
+            try:
+                self._tx_batch(
+                    "calculateSubjectiveRep",
+                    [self.trainer_ids[i] for i in rt.sel_idx],
+                    lambda k=k, rt=rt: [{"value": float(s_rep[k, i])}
+                                        for i in rt.sel_idx])
+            finally:
+                self._route_shard = None
             self.tsc.record_scores(rt.task_id, {
                 self.trainer_ids[i]: float(rt.score_auto[i])
                 for i in rt.sel_idx})
@@ -161,6 +228,9 @@ class AutoDFL:
             rt.result = FLTaskResult(rt.params, rt.score_auto, reputations,
                                      payouts, [diag_k])
             rt.phase = "done"
+        # cross-shard reputation settlement: commit the merged book/escrow
+        # into the array state; the next window-boundary seal roots it
+        self._sync_fabric_state()
 
     # -- one full task (steps 1-16 of Fig. 1), driven sequentially ----------------
     def run_task(self, task_id: str, agents, batch_fn=None, rounds: int = 5,

@@ -56,3 +56,48 @@ def rollup_digest(buf: jnp.ndarray, block_p: int = 16384,
     # lane-broadcast in the kernel cannot cancel it (even lane count)
     return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
         out[0], jnp.uint32(0), jnp.bitwise_xor, (0,))
+
+
+def _chunk_kernel(x_ref, o_ref):
+    x = x_ref[...]                                # (1, rows_per_chunk, 128)
+    mixed = jnp.bitwise_xor(x, x >> 16) * jnp.uint32(0x85EBCA6B)
+    # fold the chunk's rows into one lane vector; this block IS the whole
+    # chunk, so no cross-invocation accumulation is needed
+    o_ref[...] = jax.lax.reduce(mixed, jnp.uint32(0), jnp.bitwise_xor, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_p", "interpret"))
+def rollup_chunk_digests(buf: jnp.ndarray, chunk_p: int = 2048,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Per-chunk digests for the chunked state commitment (core/state.py).
+
+    buf: (P,) float32/uint32 buffer -> (ceil(P/chunk_p),) u32, one xor-mix
+    fold per ``chunk_p``-word chunk (zero-padded tail; zero words fold
+    away).  ``core.state.chunk_fold_digests`` is the bit-exact NumPy
+    mirror, pinned by tests/test_state.py.  chunk_p must be lane-aligned
+    (% 128) so each chunk maps to whole VPU rows.
+    """
+    assert chunk_p % 128 == 0, "chunk must be lane-aligned"
+    if buf.dtype != jnp.uint32:
+        buf = jax.lax.bitcast_convert_type(buf.astype(jnp.float32), jnp.uint32)
+    P = buf.shape[0]
+    assert P > 0, "empty buffer has no chunks"
+    pad = (-P) % chunk_p
+    if pad:
+        buf = jnp.pad(buf, (0, pad))
+    lanes = 128
+    n_chunks = (P + pad) // chunk_p
+    rows = chunk_p // lanes
+    buf3 = buf.reshape(n_chunks, rows, lanes)
+
+    out = pl.pallas_call(
+        _chunk_kernel,
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((1, rows, lanes), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, lanes), jnp.uint32),
+        interpret=interpret,
+    )(buf3)
+    # per-chunk lane fold + seed on host-side jnp (n_chunks x 128, tiny)
+    return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
+        out, jnp.uint32(0), jnp.bitwise_xor, (1,))

@@ -1,0 +1,156 @@
+"""Direct coverage for core/escrow.py (deposit / release / forfeit) and
+ledger.AccessControl.vote_readmit quorum edge cases — previously only
+exercised indirectly through the protocol e2e tests."""
+import numpy as np
+import pytest
+
+from repro.core.escrow import Escrow, InsufficientFunds
+from repro.core.ledger import AccessControl
+
+
+# -- escrow: deposit path ------------------------------------------------------
+def test_deposit_locks_reward_and_checks_funds():
+    e = Escrow()
+    e.fund("tp0", 10.0)
+    e.deposit("tp0", "t0", 7.0)
+    assert e.balances["tp0"] == 3.0
+    assert e.locked["t0"] == {"tp0": 7.0}
+    with pytest.raises(InsufficientFunds):
+        e.deposit("tp0", "t1", 5.0)               # only 3.0 left
+    assert "t1" not in e.locked                   # failed deposit locks nothing
+    with pytest.raises(AssertionError):
+        e.fund("tp0", -1.0)
+
+
+def test_collateral_lock_checks_funds():
+    e = Escrow()
+    e.fund("tr0", 2.0)
+    e.lock_collateral("tr0", "t0", 1.5)
+    assert e.balances["tr0"] == 0.5
+    assert e.collateral["t0"] == {"tr0": 1.5}
+    with pytest.raises(InsufficientFunds):
+        e.lock_collateral("tr0", "t0", 1.0)
+
+
+# -- escrow: release path (score-proportional payout + collateral return) ------
+def test_settle_releases_proportionally_and_returns_collateral():
+    e = Escrow()
+    e.fund("tp0", 100.0)
+    e.deposit("tp0", "t0", 12.0)
+    for tr, coll in (("a", 1.0), ("b", 2.0)):
+        e.fund(tr, 5.0)
+        e.lock_collateral(tr, "t0", coll)
+    payouts = e.settle("t0", {"a": 0.75, "b": 0.25})
+    assert np.isclose(payouts["a"], 9.0) and np.isclose(payouts["b"], 3.0)
+    # balance = initial - collateral + payout + returned collateral
+    assert np.isclose(e.balances["a"], 5.0 + 9.0)
+    assert np.isclose(e.balances["b"], 5.0 + 3.0)
+    assert e.slashed_pool == 0.0
+    assert "t0" not in e.locked                   # reward pot fully released
+
+
+# -- escrow: forfeit path (free-riders slashed) --------------------------------
+def test_settle_forfeits_zero_score_collateral_to_slash_pool():
+    e = Escrow()
+    e.fund("tp0", 50.0)
+    e.deposit("tp0", "t0", 10.0)
+    for tr in ("good", "rider"):
+        e.fund(tr, 4.0)
+        e.lock_collateral(tr, "t0", 2.0)
+    payouts = e.settle("t0", {"good": 0.5, "rider": 0.0})
+    assert np.isclose(payouts["good"], 10.0)      # whole pot
+    assert payouts["rider"] == 0.0
+    assert np.isclose(e.slashed_pool, 2.0)        # rider's collateral gone
+    assert np.isclose(e.balances["rider"], 2.0)   # only the unlocked rest
+    assert np.isclose(e.balances["good"], 2.0 + 10.0 + 2.0)
+
+
+def test_settle_all_zero_scores_slashes_everyone_and_strands_no_pot():
+    e = Escrow()
+    e.fund("tp0", 20.0)
+    e.deposit("tp0", "t0", 8.0)
+    for tr in ("x", "y"):
+        e.fund(tr, 3.0)
+        e.lock_collateral(tr, "t0", 1.0)
+    payouts = e.settle("t0", {"x": 0.0, "y": 1e-9})   # both under min_score
+    assert payouts == {"x": 0.0, "y": 0.0}
+    assert np.isclose(e.slashed_pool, 2.0)
+    # the pot was popped (publisher cannot repudiate, nor double-settle)
+    assert "t0" not in e.locked
+
+
+def test_settle_unknown_task_pays_nothing():
+    e = Escrow()
+    e.fund("a", 1.0)
+    assert e.settle("ghost", {"a": 1.0}) == {"a": 0.0}
+    assert e.balances["a"] == 1.0
+
+
+# -- AccessControl.vote_readmit quorum edge cases ------------------------------
+def _acl(n_admins):
+    return AccessControl([f"admin{i}" for i in range(n_admins)])
+
+
+def test_vote_readmit_exact_majority_boundary():
+    # 3 admins: strict majority is 2 — the 2nd vote readmits, not the 1st
+    acl = _acl(3)
+    acl.ban("admin0", "user")
+    assert not acl.vote_readmit("admin0", "user")
+    assert acl.vote_readmit("admin1", "user")
+    assert "user" not in acl.banned
+    # 4 admins: 2 votes is NOT a strict majority (2*2 == 4); 3 are needed
+    acl = _acl(4)
+    acl.ban("admin0", "user")
+    assert not acl.vote_readmit("admin0", "user")
+    assert not acl.vote_readmit("admin1", "user")
+    assert "user" in acl.banned
+    assert acl.vote_readmit("admin2", "user")
+
+
+def test_vote_readmit_double_vote_is_idempotent():
+    acl = _acl(4)
+    acl.ban("admin0", "user")
+    for _ in range(5):                             # one admin spamming votes
+        assert not acl.vote_readmit("admin0", "user")
+    assert "user" in acl.banned
+    assert not acl.vote_readmit("admin1", "user")
+    assert acl.vote_readmit("admin2", "user")
+
+
+def test_vote_readmit_rejects_self_vote():
+    """A banned admin stays in the consortium set (ban strips roles, not
+    membership) — their self-vote must not count toward their own quorum."""
+    acl = _acl(3)
+    acl.ban("admin1", "admin0")
+    with pytest.raises(PermissionError):
+        acl.vote_readmit("admin0", "admin0")
+    assert "admin0" in acl.banned
+    # the two OTHER admins still form a majority
+    assert not acl.vote_readmit("admin1", "admin0")
+    assert acl.vote_readmit("admin2", "admin0")
+
+
+def test_vote_readmit_nonadmin_cannot_vote_and_state_resets():
+    acl = _acl(3)
+    acl.ban("admin0", "user")
+    with pytest.raises(AssertionError):
+        acl.vote_readmit("stranger", "user")
+    assert not acl.vote_readmit("admin1", "user")
+    assert acl.vote_readmit("admin2", "user")
+    # vote tally is cleared after readmission: a later re-ban needs a
+    # fresh majority, old votes must not linger
+    acl.ban("admin0", "user")
+    assert not acl.vote_readmit("admin0", "user")
+    assert "user" in acl.banned
+
+
+def test_readmitted_user_can_be_granted_roles_again():
+    acl = _acl(3)
+    acl.grant("admin0", "user", "trainer")
+    acl.ban("admin0", "user")
+    with pytest.raises(PermissionError):
+        acl.grant("admin0", "user", "trainer")     # banned: no direct grant
+    acl.vote_readmit("admin0", "user")
+    acl.vote_readmit("admin1", "user")
+    acl.grant("admin0", "user", "trainer")
+    assert acl.has_role("user", "trainer")

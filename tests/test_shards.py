@@ -1,0 +1,293 @@
+"""Sharded rollup fabric tests (core/shards.py).
+
+Pins the PR-3 contracts:
+  * ``ShardedRollup(n_shards=1)`` is bit-equivalent to ``VectorRollup``
+    (gas_log rows, L1 confirm times/gas, digests) — standalone AND through
+    the PR-2 scheduler equivalence path (same settlement outputs);
+  * the flat array state root is identical across shard counts and across
+    runs for the same tx set; fabric/partition roots are deterministic;
+  * routing: hash routing is stable and account-aligned, least-loaded
+    balances, task pinning routes every task tx to one shard;
+  * per-shard settlement invariants (one verify/execute per shard session).
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import VectorChain, VectorRollup
+from repro.core.gas import DEFAULT_GAS
+from repro.core.ledger import LedgerBackend
+from repro.core.shards import ShardedRollup, _hash_route
+from repro.core.state import default_state_handlers
+from repro.core.workloads import make_workload
+
+GAS_KEYS = ("n_txs", "commit", "verify", "execute", "total")
+
+
+def _mk(n_shards, route="hash", wire_state=True, **kw):
+    vc = VectorChain()
+    fab = ShardedRollup(vc, n_shards=n_shards, route=route, **kw)
+    if wire_state:
+        for fn, h in default_state_handlers().items():
+            fab.register_state(fn, h)
+    return vc, fab
+
+
+def test_fabric_is_a_ledger_backend():
+    vc, fab = _mk(2)
+    assert isinstance(fab, LedgerBackend)
+
+
+# -- n_shards=1 == VectorRollup ------------------------------------------------
+def test_single_shard_pinned_to_vector_rollup():
+    wl = make_workload("mixed", 300.0, duration=10.0, seed=5)
+    vc, fab = _mk(1)
+    fab.submit_arrays(wl.txs)
+    fab.flush()
+    vc.run_until(15.0)
+
+    vcb = VectorChain()
+    base = VectorRollup(vcb)
+    base.submit_arrays(wl.txs)
+    base.flush()
+    vcb.run_until(15.0)
+
+    assert [tuple(r[k] for k in GAS_KEYS) for r in fab.gas_log] == \
+        [tuple(r[k] for k in GAS_KEYS) for r in base.gas_log]
+    assert all(r["shard"] == 0 for r in fab.gas_log)
+    assert vc.total_gas == vcb.total_gas
+    np.testing.assert_array_equal(vc.confirm_times(), vcb.confirm_times())
+    assert fab.update_digest == base.update_digest
+    assert fab.batch_digests == base.batch_digests
+    assert fab.n_batches == base.n_batches
+
+
+# -- state root invariance -----------------------------------------------------
+@pytest.mark.parametrize("route", ["hash", "least_loaded"])
+def test_state_root_invariant_across_shard_counts_and_runs(route):
+    wl = make_workload("mixed", 400.0, duration=8.0, seed=11)
+
+    def run(K):
+        vc, fab = _mk(K, route=route)
+        fab.submit_arrays(wl.txs)
+        fab.flush()
+        vc.run_until(12.0)
+        # conservation: every submitted tx sealed in exactly one shard
+        assert sum(r["n_txs"] for r in fab.gas_log) == len(wl)
+        return fab
+
+    roots = {K: run(K).state_root() for K in (1, 2, 4, 8)}
+    assert len(set(roots.values())) == 1, roots
+    # two runs at the same K: state root AND fabric root reproduce
+    a, b = run(4), run(4)
+    assert a.state_root() == b.state_root()
+    assert a.fabric_root() == b.fabric_root()
+    # fabric root commits the PARTITION structure, so it moves with K
+    assert run(2).fabric_root() != run(4).fabric_root()
+
+
+def test_fabric_roots_recorded_at_seal_windows():
+    vc, fab = _mk(2)
+    wl = make_workload("poisson", 100.0, duration=4.0, seed=1)
+    fab.submit_arrays(wl.txs)
+    fab.seal()
+    fab.seal()                 # empty window still commits (same state)
+    fab.flush()
+    assert len(fab.fabric_roots) == 3
+    assert fab.fabric_roots[0]["fabric_root"] == \
+        fab.fabric_roots[1]["fabric_root"]
+    assert [r["window"] for r in fab.fabric_roots] == [0, 1, 2]
+    assert all(len(r["shard_roots"]) == 2 for r in fab.fabric_roots)
+
+
+# -- routing -------------------------------------------------------------------
+def test_hash_routing_stable_and_account_aligned():
+    sid = np.arange(1000, dtype=np.int32)
+    r1 = _hash_route(sid, 8)
+    r2 = _hash_route(sid, 8)
+    np.testing.assert_array_equal(r1, r2)
+    assert set(np.unique(r1)) == set(range(8))   # no empty shard at 1000 accts
+    # account-aligned: every tx of one sender lands on one shard
+    vc, fab = _mk(4)
+    wl = make_workload("mixed", 300.0, duration=6.0, seed=2)
+    fab.submit_arrays(wl.txs)
+    sender_shards = {}
+    for k, s in enumerate(fab.shards):
+        for b in s._pending:
+            for sid_ in np.unique(b.sender_id):
+                assert sender_shards.setdefault(int(sid_), k) == k
+    assert len(sender_shards) > 1
+
+
+def test_least_loaded_routing_balances_batches():
+    vc, fab = _mk(4, route="least_loaded")
+    wl = make_workload("poisson", 200.0, duration=5.0, seed=3)
+    n = len(wl)
+    third = n // 3
+    for lo, hi in ((0, third), (third, 2 * third), (2 * third, n)):
+        from repro.core.engine import TxArrays
+        fab.submit_arrays(TxArrays(
+            wl.txs.submit_time[lo:hi], wl.txs.gas[lo:hi],
+            wl.txs.fn_id[lo:hi], wl.txs.sender_id[lo:hi], wl.txs.fns))
+    loaded = [s._pending_n for s in fab.shards]
+    # three batches spread over three distinct (emptiest-first) shards
+    assert sorted(x > 0 for x in loaded) == [False, True, True, True]
+
+
+def test_assign_task_routes_and_balances():
+    vc, fab = _mk(4)
+    ks = {t: fab.assign_task(t) for t in ("taskA", "taskB", "taskC")}
+    assert all(0 <= k < 4 for k in ks.values())
+    assert {t: fab.assign_task(t) for t in ks} == ks       # stable
+    vc2, fab2 = _mk(4, route="least_loaded")
+    got = [fab2.assign_task(f"t{i}") for i in range(8)]
+    assert sorted(np.bincount(got, minlength=4)) == [2, 2, 2, 2]
+
+
+def test_submit_arrays_shard_pin_overrides_routing():
+    vc, fab = _mk(4)
+    wl = make_workload("poisson", 50.0, duration=4.0, seed=7)
+    fab.submit_arrays(wl.txs, shard=2)
+    assert fab.shards[2]._pending_n == len(wl)
+    assert all(fab.shards[k]._pending_n == 0 for k in (0, 1, 3))
+
+
+def test_latency_model_reflects_actual_routing_skew():
+    """The fabric latency model must use the OBSERVED per-shard shares: a
+    router that sends everything to one shard models like a single-shard
+    fabric (the bench_shards scaling assertion measures real behavior)."""
+    wl = make_workload("poisson", 100.0, duration=5.0, seed=13)
+    vc_b, balanced = _mk(8, wire_state=False)
+    balanced.submit_arrays(wl.txs)
+    vc_s, skewed = _mk(8, wire_state=False)
+    skewed.submit_arrays(wl.txs, shard=0)        # degenerate routing
+    vc_1, single = _mk(1, wire_state=False)
+    single.submit_arrays(wl.txs)
+    n = len(wl)
+    assert skewed.latency(n) == single.latency(n)
+    assert balanced.latency(n) < skewed.latency(n)
+    assert skewed.sealed_batch_throughput(n) == \
+        pytest.approx(single.sealed_batch_throughput(n))
+
+
+# -- per-shard settlement ------------------------------------------------------
+def test_per_shard_settlement_invariants():
+    vc, fab = _mk(3, wire_state=False, batch_size=10)
+    wl = make_workload("poisson", 150.0, duration=6.0, seed=9)
+    fab.submit_arrays(wl.txs)
+    fab.flush()
+    # each ACTIVE shard posts exactly one amortized verify+execute session
+    active = [s for s in fab.shards if s.gas_log]
+    for s in active:
+        assert np.isclose(sum(r["verify"] for r in s.gas_log),
+                          DEFAULT_GAS.verify_multi)
+        assert np.isclose(sum(r["execute"] for r in s.gas_log),
+                          DEFAULT_GAS.execute_multi)
+    vc.run_until(10.0)
+    vfy = vc.fns.id("rollup_verify")
+    assert int(np.sum(vc._f[: vc.n_confirmed] == vfy)) == len(active)
+
+
+# -- PR-2 scheduler equivalence through the protocol node ----------------------
+@pytest.fixture(scope="module")
+def tiny_world():
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import gaussian_clusters
+    from repro.models.mlp import TinyMLP
+    from repro.optim.optimizers import OptimizerSpec, make_optimizer
+    model = TinyMLP(32, 16, 10)
+    opt = make_optimizer(OptimizerSpec(name="sgdm", lr=0.1, grad_clip=5.0))
+    tr_x, tr_y = gaussian_clusters(1024, 32, 10, seed=1, noise=0.5)
+    vx, vy = gaussian_clusters(100, 32, 10, seed=2, noise=0.5)
+    val = {"x": jnp.asarray(vx), "labels": jnp.asarray(vy)}
+
+    def bf(c, r):
+        g = np.random.default_rng((c * 9973 + r) % 2**31)
+        return {"x": jnp.asarray(tr_x[g.integers(0, len(tr_x), 8)]),
+                "labels": jnp.asarray(tr_y[g.integers(0, len(tr_x), 8)])}
+
+    return model, opt, val, bf, model.accuracy_fn()
+
+
+BEHAVIORS = ["good", "good", "malicious", "lazy"]
+
+
+def _agents(model, opt, store, bf):
+    from repro.fl.client import ClientConfig, TrainingAgent
+    from repro.fl.dp import DPConfig
+    return [TrainingAgent(
+        ClientConfig(f"trainer{i}", BEHAVIORS[i], local_steps=2,
+                     dp=DPConfig(noise_multiplier=0.05)),
+        model, opt, store, bf, seed=i) for i in range(len(BEHAVIORS))]
+
+
+def test_single_shard_fabric_equivalent_on_scheduler(tiny_world):
+    """Acceptance pin: a node whose L2 is ShardedRollup(n_shards=1)
+    reproduces the VectorRollup node on the PR-2 scheduler path — same
+    gas_log rows, same L1 confirm times, same settlement outputs."""
+    from repro.fl.scheduler import Scheduler
+    from repro.fl.server import AutoDFL
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+
+    def run(fabric: bool):
+        node = AutoDFL(model, opt, n, eval_fn, val, engine="vector")
+        if fabric:
+            node.rollup = ShardedRollup(node.chain, n_shards=1)
+            node._wire_state()
+        sch = Scheduler(node, seal_every=2)
+        sch.add_task("t0", _agents(model, opt, node.store, bf), rounds=3)
+        res = sch.run()["t0"]
+        return node, res
+
+    node_v, res_v = run(False)
+    node_f, res_f = run(True)
+    np.testing.assert_array_equal(res_v.scores, res_f.scores)
+    np.testing.assert_array_equal(res_v.reputations, res_f.reputations)
+    assert res_v.payouts == res_f.payouts
+    assert [tuple(r[k] for k in GAS_KEYS) for r in node_v.rollup.gas_log] \
+        == [tuple(r[k] for k in GAS_KEYS) for r in node_f.rollup.gas_log]
+    assert node_v.chain.total_gas == node_f.chain.total_gas
+    np.testing.assert_array_equal(node_v.chain.confirm_times(),
+                                  node_f.chain.confirm_times())
+    assert node_v.rollup.update_digest == node_f.rollup.update_digest
+    # both nodes committed the same array state
+    assert node_v.state_arrays.root() == node_f.state_arrays.root()
+
+
+def test_multishard_scheduler_state_root_matches_single_shard(tiny_world):
+    """Same tasks, same seeds: the committed array state is identical no
+    matter how many shards sequence the traffic."""
+    from repro.fl.cohort import CohortKernels, VectorCohort, batched_batch_fn
+    from repro.fl.dp import DPConfig
+    from repro.fl.scheduler import Scheduler
+    from repro.fl.server import AutoDFL
+    model, opt, val, bf, eval_fn = tiny_world
+    n = len(BEHAVIORS)
+
+    def run(K):
+        node = AutoDFL(model, opt, n, eval_fn, val, engine="vector",
+                       trainer_funds=50.0, n_shards=K)
+        kern = CohortKernels(model, opt, DPConfig(noise_multiplier=0.05))
+        sch = Scheduler(node, seal_every=2)
+        for t in range(3):
+            sch.add_task(f"task{t}", VectorCohort(
+                model, opt, batched_batch_fn(bf, 2), node.store,
+                behaviors=BEHAVIORS, local_steps=2,
+                dp=DPConfig(noise_multiplier=0.05), seed=t, kernels=kern),
+                rounds=2, start_window=t % 2)
+        out = sch.run()
+        assert all(v is not None for v in out.values())
+        return node
+
+    nodes = {K: run(K) for K in (1, 2, 4)}
+    roots = {K: nd.state_arrays.root() for K, nd in nodes.items()}
+    assert len(set(roots.values())) == 1, roots
+    # cross-shard settlement synced the book into every fabric state
+    for nd in nodes.values():
+        ids = [nd._target().sender_id(t) for t in nd.trainer_ids]
+        np.testing.assert_allclose(nd.state_arrays.reputation[ids],
+                                   np.asarray(nd.book.reputation))
+    # the sharded nodes recorded window-boundary fabric roots
+    assert len(nodes[2].rollup.fabric_roots) > 0
+    assert len(nodes[4].rollup.fabric_roots) > 0
