@@ -20,8 +20,9 @@ from __future__ import annotations
 import time
 from typing import Dict
 
+from repro.api import WorkloadSpec, preset
 from repro.core.ledger import simulate_load, simulate_workload
-from repro.core.workloads import SCENARIOS, make_workload
+from repro.core.workloads import SCENARIOS
 
 FULL_N_TXS = 1_000_000
 # quick mode keeps the vector side >=10ms so the reported ratio is not
@@ -30,19 +31,19 @@ QUICK_N_TXS = 200_000
 DURATION = 20.0
 
 
-def _timed_load(engine: str, n_txs: int) -> Dict:
+def _timed_load(chain_spec, n_txs: int) -> Dict:
     rate = n_txs / DURATION
     t0 = time.perf_counter()
     m = simulate_load("submitLocalModel", rate, duration=DURATION,
-                      engine=engine)
+                      spec=chain_spec)
     m["wall_s"] = time.perf_counter() - t0
     return m
 
 
 def run(quick: bool = False) -> Dict:
     n_txs = QUICK_N_TXS if quick else FULL_N_TXS
-    vec = _timed_load("vector", n_txs)
-    obj = _timed_load("object", n_txs)
+    vec = _timed_load(preset("l1-vector").chain, n_txs)
+    obj = _timed_load(preset("l1-object").chain, n_txs)
     for k in ("confirmed", "submitted", "throughput"):
         assert vec[k] == obj[k], (k, vec[k], obj[k])
     assert abs(vec["latency"] - obj["latency"]) < 1e-9
@@ -54,7 +55,7 @@ def run(quick: bool = False) -> Dict:
     scenarios = {}
     s_rate = 200.0 if quick else 2000.0
     for name in sorted(SCENARIOS):
-        wl = make_workload(name, s_rate, duration=10.0, seed=0)
+        wl = WorkloadSpec.make(name, s_rate, duration=10.0, seed=0).build()
         t0 = time.perf_counter()
         m = simulate_workload(wl)
         scenarios[name] = {"submitted": m.get("submitted", 0),

@@ -6,10 +6,10 @@ published numbers and the 'up to 20x' headline claim.
 """
 from __future__ import annotations
 
+from repro.api import build_stack, preset
 from repro.core.gas import (DEFAULT_GAS, FUNCTIONS, gas_reduction, l1_gas,
                             l2_gas)
-from repro.core.ledger import Chain, Tx
-from repro.core.rollup import Rollup
+from repro.core.ledger import Tx
 
 # Table I ground truth (Total column), for tolerance checks.
 PAPER_L2_TOTAL = {
@@ -34,8 +34,7 @@ PAPER_L1_TOTAL = {
 
 def run_live_rollup(fn: str, n_calls: int) -> int:
     """Push n_calls through the live Rollup engine; sum settled gas."""
-    chain = Chain()
-    ru = Rollup(chain)
+    chain, ru = build_stack(preset("rollup-object"))
     for i in range(n_calls):
         ru.submit(Tx(fn, f"c{i}", {}, 0, i * 0.01))
     ru.flush()

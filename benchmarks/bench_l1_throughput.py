@@ -7,19 +7,21 @@ lower; latency rises sharply past saturation).
 """
 from __future__ import annotations
 
+from repro.api import WorkloadSpec, preset
 from repro.core.gas import FUNCTIONS
 from repro.core.ledger import simulate_load, simulate_workload
-from repro.core.workloads import SCENARIOS, make_workload
+from repro.core.workloads import SCENARIOS
 
 SEND_RATES = (20, 40, 80, 160, 320, 640)
 
 
-def run(duration: float = 20.0, engine: str = "vector"):
+def run(duration: float = 20.0, spec=None):
+    chain = (spec or preset("l1-vector")).chain
     table = {}
     for fn in FUNCTIONS:
         rows = []
         for rate in SEND_RATES:
-            m = simulate_load(fn, rate, duration=duration, engine=engine)
+            m = simulate_load(fn, rate, duration=duration, spec=chain)
             rows.append({"send_rate": rate,
                          "throughput": round(m["throughput"], 1),
                          "latency_s": round(m["latency"], 3)})
@@ -27,8 +29,9 @@ def run(duration: float = 20.0, engine: str = "vector"):
     # beyond-Fig.-4: the scenario catalog at one aggregate rate
     scenario_rows = []
     for name in sorted(SCENARIOS):
-        m = simulate_workload(make_workload(name, 160.0, duration=duration),
-                              engine=engine)
+        m = simulate_workload(WorkloadSpec.make(name, 160.0,
+                                                duration=duration),
+                              spec=chain)
         scenario_rows.append({"scenario": name,
                               "submitted": m.get("submitted", 0),
                               "throughput": round(m["throughput"], 1),

@@ -7,15 +7,17 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import preset
 from repro.core.gas import FUNCTIONS, ROLLUP_BATCH
 from repro.core.ledger import simulate_load
 
 
-def run(duration: float = 20.0, engine: str = "vector"):
+def run(duration: float = 20.0, spec=None):
+    chain = (spec or preset("l1-vector")).chain
     rows = []
     for fn in FUNCTIONS:
         peak = max(simulate_load(fn, rate, duration=duration,
-                                 engine=engine)["throughput"]
+                                 spec=chain)["throughput"]
                    for rate in (160, 320, 640))
         l2 = ROLLUP_BATCH * peak
         rows.append({"fn": fn, "l1_peak_tps": round(peak, 1),

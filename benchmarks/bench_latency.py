@@ -46,10 +46,14 @@ def run():
         "processing 100 txs must take only seconds (paper claim)"
     # beyond-Table-II: multi-lane sequencer latency (engine.VectorRollup);
     # lanes seal concurrently, so session latency falls with lane count
-    from repro.core.engine import VectorChain, VectorRollup
+    import dataclasses
+
+    from repro.api import build_ledger, preset
     lane_rows = []
+    base = preset("rollup-vector")
     for lanes in (1, 2, 4, 8):
-        ru = VectorRollup(VectorChain(), n_lanes=lanes)
+        ru = build_ledger(dataclasses.replace(
+            base, rollup=dataclasses.replace(base.rollup, n_lanes=lanes)))
         lane_rows.append({"lanes": lanes,
                           "latency_100_calls_s": round(ru.latency(100), 3)})
     lats = [r["latency_100_calls_s"] for r in lane_rows]

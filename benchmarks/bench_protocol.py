@@ -44,6 +44,7 @@ if _SRC not in sys.path:
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FLTaskSpec, preset
 from repro.core.gas import DEFAULT_GAS
 from repro.data.synthetic import gaussian_clusters
 from repro.fl.client import ClientConfig, TrainingAgent
@@ -88,9 +89,10 @@ def _l1_equivalent(calls: Dict[str, int]) -> int:
 
 def _run_sequential(world, n_tasks: int, n_trainers: int) -> Dict:
     model, opt, val, eval_fn, dp, bf, _ = world
-    node = AutoDFL(model, opt, n_trainers, eval_fn, val, engine="object",
-                   trainer_funds=10.0 * (n_tasks + 2),
-                   publisher_funds=100.0 * (n_tasks + 2))
+    spec = preset("protocol-sequential",
+                  trainer_funds=10.0 * (n_tasks + 2),
+                  publisher_funds=100.0 * (n_tasks + 2))
+    node = AutoDFL(model, opt, n_trainers, eval_fn, val, spec=spec)
     agents = [TrainingAgent(
         ClientConfig(f"trainer{i}", "good", dp=dp,
                      local_steps=LOCAL_STEPS),
@@ -98,11 +100,11 @@ def _run_sequential(world, n_tasks: int, n_trainers: int) -> Dict:
     # per-agent jits must warm on the SAME agent objects (per-instance
     # closures), so the warmup task runs on the measured node; the timed
     # region counts call deltas only
-    node.run_task("warmup", agents, bf, rounds=1)
+    node.run_task(FLTaskSpec("warmup", rounds=1), agents, bf)
     calls0 = dict(node.protocol_calls)
     t0 = time.perf_counter()
     for t in range(n_tasks):
-        node.run_task(f"task{t}", agents, bf, rounds=ROUNDS)
+        node.run_task(FLTaskSpec(f"task{t}", rounds=ROUNDS), agents, bf)
     wall = time.perf_counter() - t0
     delta = {fn: n - calls0.get(fn, 0)
              for fn, n in node.protocol_calls.items()}
@@ -117,10 +119,10 @@ def _run_scheduler(world, n_tasks: int, n_trainers: int,
     model, opt, val, eval_fn, dp, _, vbf = world
 
     def build():
-        node = AutoDFL(model, opt, n_trainers, eval_fn, val,
-                       engine="vector",
-                       trainer_funds=10.0 * (n_tasks + 2),
-                       publisher_funds=100.0 * (n_tasks + 2))
+        spec = preset("protocol-scheduler",
+                      trainer_funds=10.0 * (n_tasks + 2),
+                      publisher_funds=100.0 * (n_tasks + 2))
+        node = AutoDFL(model, opt, n_trainers, eval_fn, val, spec=spec)
         sch = Scheduler(node, seal_every=2)
         return node, sch
 
@@ -129,18 +131,17 @@ def _run_scheduler(world, n_tasks: int, n_trainers: int,
     # kernels / module-level jits, not the node
     wnode, wsch = build()
     for t in range(n_tasks):
-        wsch.add_task(f"warm{t}", VectorCohort(
+        wsch.add_task(FLTaskSpec(f"warm{t}", rounds=ROUNDS), VectorCohort(
             model, opt, vbf, wnode.store, n_trainers=n_trainers,
             local_steps=LOCAL_STEPS, dp=dp, seed=100 + t,
-            kernels=kernels), rounds=ROUNDS)
+            kernels=kernels))
     wsch.run()
 
     node, sch = build()
     for t in range(n_tasks):
-        sch.add_task(f"task{t}", VectorCohort(
+        sch.add_task(FLTaskSpec(f"task{t}", rounds=ROUNDS), VectorCohort(
             model, opt, vbf, node.store, n_trainers=n_trainers,
-            local_steps=LOCAL_STEPS, dp=dp, seed=t, kernels=kernels),
-            rounds=ROUNDS)
+            local_steps=LOCAL_STEPS, dp=dp, seed=t, kernels=kernels))
     t0 = time.perf_counter()
     out = sch.run()
     wall = time.perf_counter() - t0

@@ -34,15 +34,13 @@ if _SRC not in sys.path:
 
 import numpy as np
 
-from repro.core.engine import VectorChain
-from repro.core.shards import ShardedRollup
+from repro.api import ShardSpec, build_stack, preset
 from repro.core.state import default_state_handlers
-from repro.core.workloads import make_workload
 
 
-def _run_point(wl, n_shards: int) -> Dict:
-    chain = VectorChain(fns=wl.txs.fns)
-    fabric = ShardedRollup(chain, n_shards=n_shards)
+def _run_point(wl, k: int) -> Dict:
+    spec = preset("shard-fabric", shards=ShardSpec(count=k, fabric=True))
+    chain, fabric = build_stack(spec, fns=wl.txs.fns)
     for fn, handler in default_state_handlers().items():
         fabric.register_state(fn, handler)
     t0 = time.perf_counter()
@@ -54,7 +52,7 @@ def _run_point(wl, n_shards: int) -> Dict:
     assert sum(r["n_txs"] for r in fabric.gas_log) == n, \
         "every tx must seal in exactly one shard"
     return {
-        "n_shards": n_shards,
+        "n_shards": k,
         "n_txs": n,
         "n_batches": fabric.n_batches,
         "seal_wall_s": round(seal_wall, 4),
@@ -68,9 +66,13 @@ def _run_point(wl, n_shards: int) -> Dict:
 
 
 def run(quick: bool = False) -> Dict:
-    rate, duration = (2_000.0, 10.0) if quick else (20_000.0, 10.0)
+    import dataclasses
+    wspec = preset("shard-fabric").workload
+    if quick:
+        wspec = dataclasses.replace(wspec, rate=2_000.0)
+    rate, duration = wspec.rate, wspec.duration
     shard_counts = [1, 2] if quick else [1, 2, 4, 8]
-    wl = make_workload("mixed", rate, duration=duration, seed=0)
+    wl = wspec.build()
     points = {f"shards={k}": _run_point(wl, k) for k in shard_counts}
 
     roots = {k: p["state_root"] for k, p in points.items()}
@@ -89,7 +91,7 @@ def run(quick: bool = False) -> Dict:
     assert scaling >= floor, (
         f"{hi}-shard fabric must sustain >= {floor}x the {lo}-shard "
         f"sealed-batch throughput, got {scaling:.2f}x")
-    return {"quick": quick, "workload": "mixed",
+    return {"quick": quick, "workload": wspec.scenario,
             "rate": rate, "duration": duration,
             "shard_counts": shard_counts, "points": points,
             "state_root": roots[f"shards={lo}"],

@@ -15,7 +15,10 @@ assertions except the 1M-tx speedup floor (which needs the full run).
 ``python benchmarks/run.py --all`` runs NO benchmarks: it aggregates every
 ``BENCH_*.json`` already in ``benchmarks/`` into one summary table (stdout)
 and writes ``BENCH_summary.json`` — the cross-PR comparison view CI
-artifacts are diffed against.
+artifacts are diffed against.  The summary embeds the ``repro.api``
+NodeSpec preset catalog (``_presets``): each bench declares its node
+scenario as data there, so a PR that changes a scenario shows up as a
+spec diff in the artifact.
 """
 from __future__ import annotations
 
@@ -83,6 +86,11 @@ def run_all(bench_dir: str) -> None:
         hl = "|".join(f"{k}={v}" for k, v in headline.items()) \
             if isinstance(headline, dict) else str(headline)
         print(f"{stem},{int(entry.get('quick', False))},{hl}")
+    # the scenario catalog every bench builds its nodes from, as data
+    from repro.api import describe_presets
+    summary["_presets"] = describe_presets()
+    print(f"# node presets: {','.join(sorted(summary['_presets']))}",
+          file=sys.stderr)
     path = os.path.join(bench_dir, "BENCH_summary.json")
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, default=str)

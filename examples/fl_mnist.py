@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ChainSpec, FLTaskSpec, NodeSpec, RollupSpec
 from repro.configs.registry import get_config
 from repro.data.pipeline import client_batch_fn
 from repro.data.synthetic import make_mnist_like
@@ -46,8 +47,12 @@ def main():
     bf = lambda c, r: {k: jnp.asarray(v) for k, v in raw(c, r).items()}
     eval_fn = jax.jit(lambda p, b: lenet.accuracy(cfg, p, b))
 
-    sys = AutoDFL(model, opt, args.clients, eval_fn, val,
-                  use_rollup=not args.no_rollup)
+    # public API: the node is described by a spec — the paper-faithful
+    # object engine, with the L2 rollup unless --no-rollup asked for the
+    # single-layer baseline
+    spec = NodeSpec(chain=ChainSpec(backend="object"),
+                    rollup=None if args.no_rollup else RollupSpec())
+    sys = AutoDFL(model, opt, args.clients, eval_fn, val, spec=spec)
     behaviors = (["good", "good", "malicious", "lazy"] * 8)[: args.clients]
     agents = [TrainingAgent(
         ClientConfig(f"trainer{i}", behaviors[i],
@@ -58,7 +63,8 @@ def main():
         f"{b[:4]}{i}" for i, b in enumerate(behaviors)))
     res = None
     for t in range(args.tasks):
-        res = sys.run_task(f"task{t}", agents, bf, rounds=args.rounds)
+        res = sys.run_task(FLTaskSpec(f"task{t}", rounds=args.rounds),
+                           agents, bf)
         reps = " | ".join(f"{r:5.3f}" for r in res.reputations)
         print(f"{t:5d} | {reps}")
 

@@ -1,8 +1,10 @@
-"""Quickstart: the AutoDFL reproduction in ~60 lines.
+"""Quickstart: the AutoDFL reproduction in ~80 lines.
 
-1. Build any assigned architecture from the registry (--arch).
-2. Run a few training steps on CPU with a reduced config.
-3. Run one reputation-weighted rollup round (the paper's technique).
+1. Drive the public node API: NodeSpec -> NodeClient -> tx receipts,
+   account views, state root (the zk-rollup RPC surface).
+2. Build any assigned architecture from the registry (--arch).
+3. Run a few training steps on CPU with a reduced config.
+4. Run one reputation-weighted rollup round (the paper's technique).
 
 Usage:
     PYTHONPATH=src python examples/quickstart.py --arch qwen2-0.5b --steps 3
@@ -13,10 +15,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import NodeClient, NodeSpec, ShardSpec
 from repro.configs.registry import REGISTRY, reduced_config
 from repro.fl.round import FLRoundSpec, build_fl_round
 from repro.models.model import build_model
 from repro.optim.optimizers import OptimizerSpec, make_optimizer
+
+
+def api_demo():
+    """The public API path: typed spec -> client -> receipts + state."""
+    spec = NodeSpec(shards=ShardSpec(count=2))    # 2-shard L2 over one L1
+    client = NodeClient.from_spec(spec)
+    sealed = []
+    client.subscribe("window_settled", sealed.append)
+    receipts = [client.submit("submitLocalModel", f"trainer{i % 4}")
+                for i in range(25)]
+    client.flush()                                 # seal + settle the L2
+    client.run_until(5.0)                          # L1 blocks to t=5s
+    r = client.refresh(receipts[0])
+    print(f"tx receipt: status={r.status} shard={r.shard} batch={r.batch} "
+          f"l1_block={r.block} gas={r.gas_breakdown['batch_total']:.0f}")
+    acct = client.get_account("trainer0")
+    print(f"account trainer0: submissions={acct.submissions} "
+          f"reputation={acct.reputation:.2f}")
+    print(f"state root: {client.state_root()}  "
+          f"(windows settled: {len(sealed)})")
+    assert r.status == "settled" and acct.submissions > 0 and sealed
 
 
 def main():
@@ -24,6 +48,8 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b", choices=sorted(REGISTRY))
     ap.add_argument("--steps", type=int, default=3)
     args = ap.parse_args()
+
+    api_demo()
 
     cfg = reduced_config(REGISTRY[args.arch])
     print(f"arch={cfg.name} family={cfg.family} (reduced config for CPU)")

@@ -1,0 +1,29 @@
+"""Public node API: typed specs, one ledger factory, an RPC-style client.
+
+This package is the supported entry point for building and driving
+nodes; everything else under ``repro.core``/``repro.fl`` is
+implementation.  See README "Public API" and docs/MIGRATION.md for the
+old-kwarg -> spec mapping.
+
+    from repro.api import ChainSpec, NodeSpec, NodeClient, build_ledger
+
+    client = NodeClient.from_spec(NodeSpec())      # vector L1 + rollup
+    rcpt = client.submit("submitLocalModel", "trainer0")
+    client.flush(); client.run_until(10.0)
+    rcpt = client.refresh(rcpt)                    # batch, gas, L1 block
+"""
+from repro.api.client import AccountView, NodeClient, TxReceipt
+from repro.api.factory import (build_chain, build_ledger, build_node,
+                               build_stack, l1_of)
+from repro.api.presets import PRESETS, describe_presets, preset
+from repro.api.specs import (ChainSpec, DONSpec, FLTaskSpec, NodeSpec,
+                             ReputationSpec, RollupSpec, ShardSpec,
+                             WorkloadSpec, as_task_spec)
+
+__all__ = [
+    "AccountView", "NodeClient", "TxReceipt",
+    "build_chain", "build_ledger", "build_node", "build_stack", "l1_of",
+    "PRESETS", "describe_presets", "preset",
+    "ChainSpec", "DONSpec", "FLTaskSpec", "NodeSpec", "ReputationSpec",
+    "RollupSpec", "ShardSpec", "WorkloadSpec", "as_task_spec",
+]

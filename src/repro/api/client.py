@@ -1,0 +1,296 @@
+"""zk-rollup-style node client: submit -> TxReceipt, accounts, events.
+
+``NodeClient`` is the RPC-shaped façade over any ledger built by
+``repro.api.build_ledger`` (or owned by an ``AutoDFL`` node): it hides
+which of the five backends is underneath and speaks the vocabulary a
+rollup RPC would —
+
+  * ``submit(fn, sender) -> TxReceipt``: a receipt with status, gas
+    breakdown, L2 batch id / L1 block, and the L1 settlement ref of the
+    batch that sealed the transaction.  ``refresh(receipt)`` re-resolves
+    it against the live ledger (receipts are cheap provenance handles,
+    not snapshots).
+  * ``get_account(addr) -> AccountView``: balance / stake / reputation /
+    protocol counters straight from the array-native account state
+    (core/state.StateArrays).
+  * ``state_root()``: the chunked state commitment.
+  * ``subscribe(event, cb)``: ``"batch_sealed"`` / ``"session_settled"``
+    on the rollup faces, plus ``"window_settled"`` (fabric-root records)
+    on the sharded fabric.
+
+Receipt statuses: ``pending`` (submitted, not sealed/confirmed) ->
+``sealed`` (in a committed L2 batch, session open) -> ``settled`` (the
+batch's amortized verify/execute posted to the L1).  On a chain-only
+node the ladder is ``pending`` -> ``confirmed`` (packed into a block).
+
+Gas accounting contract (pinned by tests/test_api.py): a receipt's
+``batch_*`` breakdown equals the ledger's own ``gas_log`` row, and the
+``amortized`` per-tx share sums back to the ledger's accounted L2 gas
+over any full batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.api.factory import build_ledger, l1_of
+from repro.api.specs import NodeSpec
+from repro.core.gas import DEFAULT_GAS, L1_DEFAULT_GAS, GasTable
+
+
+@dataclasses.dataclass
+class TxReceipt:
+    """Provenance handle for one submitted transaction."""
+
+    fn: str
+    sender: str
+    gas: int                       # intrinsic (L1-schedule) gas of the tx
+    submit_time: float
+    status: str = "pending"        # pending | sealed | settled | confirmed
+    seq: Optional[int] = None      # provenance in the target's namespace
+    shard: Optional[int] = None    # owning shard (fabric only)
+    batch: Optional[int] = None    # global L2 batch id
+    block: Optional[int] = None    # L1 block height (commit tx / own tx)
+    block_hash: Optional[str] = None
+    l1_ref: Optional[Any] = None   # L1 settlement ref of the commit
+    confirm_time: Optional[float] = None
+    gas_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # object-path handle (the submitted Tx); excluded from equality so
+    # receipts compare by provenance, not object identity
+    tx: Optional[Any] = dataclasses.field(default=None, repr=False,
+                                          compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class AccountView:
+    """One StateArrays row, by address (zeros for unknown accounts)."""
+
+    address: str
+    account_id: Optional[int]
+    balance: float = 0.0
+    stake: float = 0.0
+    reputation: float = 0.0
+    tasks_published: int = 0
+    submissions: int = 0
+    rep_events: int = 0
+
+
+class NodeClient:
+    """RPC-shaped façade over one ledger stack (L1 + optional L2)."""
+
+    def __init__(self, target, chain=None,
+                 gas_table: GasTable = DEFAULT_GAS, clock_start: float = 0.0):
+        self.target = target
+        self.chain = chain if chain is not None else l1_of(target)
+        self.gas_table = gas_table
+        self._clock = clock_start
+
+    @classmethod
+    def from_spec(cls, spec: NodeSpec, wire_state: bool = True,
+                  **build_kw) -> "NodeClient":
+        """Build the ledger from a spec and wrap it.  ``wire_state``
+        attaches the default Table-I account-state handlers so
+        ``get_account``/``state_root`` report live protocol counters."""
+        target = build_ledger(spec, **build_kw)
+        if wire_state and hasattr(target, "register_state"):
+            from repro.core.state import default_state_handlers
+            for fn, handler in default_state_handlers().items():
+                target.register_state(fn, handler)
+        gas = spec.chain.gas_table if isinstance(spec, NodeSpec) else \
+            spec.gas_table
+        return cls(target, gas_table=gas)
+
+    # -- submission ------------------------------------------------------------
+    def _stamp(self, at: Optional[float]) -> float:
+        if at is None:
+            self._clock += 0.01
+            return self._clock
+        self._clock = max(self._clock, float(at))
+        return float(at)
+
+    def submit(self, fn: str, sender: str, payload: Optional[Dict] = None,
+               gas: Optional[int] = None,
+               at: Optional[float] = None) -> TxReceipt:
+        """Submit one transaction; returns its receipt (initially
+        ``pending`` — call ``refresh`` after blocks/seals advance).
+
+        ``payload`` rides only on the object backends; the SoA engines
+        drop payloads by design, so passing one there is an error rather
+        than a silent per-backend divergence."""
+        gas = int(gas if gas is not None else
+                  self.gas_table.l1_per_call.get(fn, L1_DEFAULT_GAS))
+        t = self._stamp(at)
+        target = self.target
+        if getattr(target, "soa_native", False):
+            if payload:
+                raise ValueError(
+                    "payloads need ChainSpec(backend='object'); the SoA "
+                    "engines carry (time, gas, fn, sender) only")
+            from repro.core.engine import TxArrays
+            batch = TxArrays(np.array([t], np.float64),
+                             np.array([gas], np.int64),
+                             np.array([target.fns.id(fn)], np.int32),
+                             np.array([target.sender_id(sender)], np.int32),
+                             target.fns)
+            prov = target.submit_arrays(batch)
+            if isinstance(prov, tuple) and isinstance(prov[0], np.ndarray):
+                rcpt = TxReceipt(fn, sender, gas, t, shard=int(prov[0][0]),
+                                 seq=int(prov[1][0]))
+            else:
+                rcpt = TxReceipt(fn, sender, gas, t, seq=int(prov[0]))
+        else:
+            from repro.core.ledger import Tx
+            tx = Tx(fn, sender, dict(payload or {}), gas, t)
+            target.submit(tx)
+            rcpt = TxReceipt(fn, sender, gas, t, tx=tx)
+        return self.refresh(rcpt)
+
+    def submit_arrays(self, batch) -> List[TxReceipt]:
+        """Submit a SoA TxArrays batch; returns one receipt per tx."""
+        fns = batch.fns
+        names = [fns.names[int(f)] for f in batch.fn_id]
+        prov = self.target.submit_arrays(batch)
+        out = []
+        if isinstance(prov, tuple) and isinstance(prov[0], np.ndarray):
+            shard_of, seq_of = prov                   # sharded fabric
+            for i in range(len(batch)):
+                out.append(TxReceipt(
+                    names[i], f"acct{int(batch.sender_id[i])}",
+                    int(batch.gas[i]), float(batch.submit_time[i]),
+                    shard=int(shard_of[i]), seq=int(seq_of[i])))
+        elif isinstance(prov, tuple):                 # (lo, hi) range
+            lo, _hi = prov
+            for i in range(len(batch)):
+                out.append(TxReceipt(
+                    names[i], f"acct{int(batch.sender_id[i])}",
+                    int(batch.gas[i]), float(batch.submit_time[i]),
+                    seq=lo + i))
+        else:                                         # object faces: Tx list
+            for i, tx in enumerate(prov):
+                out.append(TxReceipt(names[i], tx.sender, int(batch.gas[i]),
+                                     float(batch.submit_time[i]), tx=tx))
+        self._clock = max(self._clock,
+                          float(batch.submit_time[-1]) if len(batch) else 0.0)
+        return out
+
+    # -- receipt resolution ----------------------------------------------------
+    def refresh(self, rcpt: TxReceipt) -> TxReceipt:
+        """Re-resolve a receipt against the live ledger (in place)."""
+        t = self.target
+        if hasattr(t, "shards"):                      # sharded fabric
+            self._refresh_rollup(rcpt, t.shards[rcpt.shard])
+        elif hasattr(t, "batch_size"):                # rollup face
+            self._refresh_rollup(rcpt, t)
+        else:                                         # chain-only
+            self._refresh_chain(rcpt)
+        return rcpt
+
+    def _refresh_rollup(self, r: TxReceipt, ru) -> None:
+        if r.tx is not None:                          # object Rollup
+            batch = ru.tx_batch.get(r.tx.tx_id)
+        else:
+            batch = ru.batch_of_seq(r.seq)
+        if batch is None:
+            r.status = "pending"
+            return
+        r.batch = int(batch)
+        row = ru.gas_log[batch] if (batch < len(ru.gas_log) and
+                                    ru.gas_log[batch]["batch"] == batch) \
+            else next(x for x in ru.gas_log if x["batch"] == batch)
+        n_txs = max(1, int(row["n_txs"]))
+        r.gas_breakdown = {
+            "intrinsic": float(r.gas),
+            "batch_commit": float(row["commit"]),
+            "batch_verify": float(row["verify"]),
+            "batch_execute": float(row["execute"]),
+            "batch_total": float(row["total"]),
+            "batch_n_txs": float(row["n_txs"]),
+            "amortized": float(row["total"]) / n_txs,
+        }
+        r.status = "settled" if batch in ru.batch_settle_ref else "sealed"
+        ref = ru.batch_commit_ref.get(batch)
+        r.l1_ref = getattr(ref, "tx_id", ref)
+        if isinstance(ref, (int, np.integer)):        # VectorChain L1 index
+            blk = self.chain.block_of(int(ref))
+            if blk is not None:
+                r.block, r.block_hash = blk.height, blk.block_hash
+                r.confirm_time = self.chain.confirm_time_of(int(ref))
+        elif ref is not None:                         # object Chain Tx
+            r.block, r.confirm_time = ref.block_height, ref.confirm_time
+            if ref.block_height is not None:
+                r.block_hash = \
+                    self.chain.blocks[ref.block_height].block_hash
+
+    def _refresh_chain(self, r: TxReceipt) -> None:
+        r.gas_breakdown = {"intrinsic": float(r.gas)}
+        if r.tx is not None:                          # object Chain
+            if r.tx.confirm_time is None:
+                r.status = "pending"
+                return
+            r.status = "confirmed"
+            r.block, r.confirm_time = r.tx.block_height, r.tx.confirm_time
+            if r.tx.block_height is not None:
+                r.block_hash = self.chain.blocks[r.tx.block_height].block_hash
+        else:                                         # VectorChain
+            blk = self.chain.block_of(r.seq)
+            if blk is None:
+                r.status = "pending"
+                return
+            r.status = "confirmed"
+            r.block, r.block_hash = blk.height, blk.block_hash
+            r.confirm_time = self.chain.confirm_time_of(r.seq)
+        r.l1_ref = r.block_hash
+
+    # -- state queries ---------------------------------------------------------
+    def _state_arrays(self):
+        st = getattr(self.target, "state", None)
+        from repro.core.state import StateArrays
+        if isinstance(st, StateArrays):               # fabric keeps it here
+            return st
+        return getattr(self.target, "state_arrays", None)
+
+    def get_account(self, addr: str) -> AccountView:
+        """Balance/stake/reputation + protocol counters for an address
+        (a read: unknown addresses are NOT minted into the namespace)."""
+        sid = getattr(self.target, "_sender_ids", {}).get(addr)
+        st = self._state_arrays()
+        if sid is None or st is None or sid >= st.n:
+            return AccountView(addr, sid)
+        return AccountView(
+            addr, sid, balance=float(st.balances[sid]),
+            stake=float(st.stake[sid]), reputation=float(st.reputation[sid]),
+            tasks_published=int(st.tasks_published[sid]),
+            submissions=int(st.submissions[sid]),
+            rep_events=int(st.rep_events[sid]))
+
+    def state_root(self) -> str:
+        return self.target.state_root()
+
+    # -- events ----------------------------------------------------------------
+    def subscribe(self, event: str, callback: Callable) -> None:
+        """Events: ``batch_sealed`` / ``session_settled`` on any rollup
+        face, ``window_settled`` on the sharded fabric."""
+        sub = getattr(self.target, "subscribe", None)
+        if sub is None:
+            raise ValueError("chain-only node exposes no batch/window "
+                             "events; configure a RollupSpec")
+        sub(event, callback)
+
+    # -- lifecycle passthroughs ------------------------------------------------
+    def seal(self) -> int:
+        """Seal pending L2 batches (no-op count on chain-only nodes)."""
+        seal = getattr(self.target, "seal", None)
+        return seal() if seal is not None else 0
+
+    def flush(self) -> None:
+        """Seal + settle the open L2 session (chain-only: no-op)."""
+        flush = getattr(self.target, "flush", None)
+        if flush is not None:
+            flush()
+
+    def run_until(self, t_end: float) -> None:
+        """Drive L1 block production to ``t_end`` simulated seconds."""
+        self.chain.run_until(t_end)
+        self._clock = max(self._clock, t_end)

@@ -36,6 +36,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.ledger import EventHooks
 from repro.core.state import MIX_MULT as DIGEST_MULT
 from repro.core.state import MIX_SEED as DIGEST_SEED
 from repro.core.state import Registry
@@ -215,6 +216,7 @@ class VectorChain:
         self._ptr = 0                            # first unconfirmed index
         self._staged: List[TxArrays] = []
         self._staged_n = 0
+        self._block_stops = np.empty(0, np.int64)   # block_of lookup cache
 
     # -- contract surface ------------------------------------------------------
     def register_batch(self, fn: str, handler: Callable):
@@ -235,6 +237,9 @@ class VectorChain:
             else ""
 
     def submit_arrays(self, batch: TxArrays):
+        """Stage a SoA batch; returns the ``[lo, hi)`` global arrival-index
+        range assigned to it (tx provenance: the index is stable across
+        consolidation and is what ``block_of``/receipts resolve)."""
         if batch.fns is not self.fns:
             # remap fn ids into this chain's registry
             remap = np.array([self.fns.id(n) for n in batch.fns.names],
@@ -242,8 +247,10 @@ class VectorChain:
             batch = TxArrays(batch.submit_time, batch.gas,
                              remap[batch.fn_id] if len(batch) else
                              batch.fn_id, batch.sender_id, self.fns)
+        lo = self._n + self._staged_n
         self._staged.append(batch)
         self._staged_n += len(batch)
+        return lo, lo + len(batch)
 
     def sender_id(self, sender: str) -> int:
         """Stable sender-name -> id mapping for the object-Tx shim."""
@@ -253,7 +260,26 @@ class VectorChain:
         """Object-Tx compatibility shim (small-N debugging)."""
         batch = TxArrays.from_txs([tx], self.fns)
         batch.sender_id = np.array([self.sender_id(tx.sender)], np.int32)
-        self.submit_arrays(batch)
+        return self.submit_arrays(batch)
+
+    # -- provenance (receipts) -------------------------------------------------
+    def block_of(self, tx_index: int) -> Optional[BlockStats]:
+        """The block that confirmed arrival index ``tx_index`` (None while
+        unconfirmed).  O(log blocks) against a cached stop array."""
+        if tx_index >= self._ptr:
+            return None
+        if self._block_stops.shape[0] != len(self.blocks):
+            self._block_stops = np.array([b.stop for b in self.blocks],
+                                         np.int64)
+        h = int(np.searchsorted(self._block_stops, tx_index, side="right"))
+        blk = self.blocks[h]
+        assert blk.start <= tx_index < blk.stop
+        return blk
+
+    def confirm_time_of(self, tx_index: int) -> Optional[float]:
+        if tx_index >= self._ptr:
+            return None
+        return float(self._confirm[tx_index])
 
     def quorum(self, approvals: int) -> bool:
         return 3 * approvals >= 2 * self.n_validators
@@ -382,7 +408,7 @@ class VectorChain:
                 "submitted": self.n_submitted}
 
 
-class VectorRollup:
+class VectorRollup(EventHooks):
     """Vectorized mirror of ``rollup.Rollup`` with a multi-lane sequencer.
 
     Transactions stripe round-robin across ``n_lanes`` lanes; each lane cuts
@@ -424,17 +450,34 @@ class VectorRollup:
         self._pending_n = 0
         self._unsettled_rows: List[int] = []
         self._last_time = 0.0
+        # tx->batch provenance: submission order IS seal order, so the
+        # seq->batch map extends chunk-wise at each seal (receipts resolve
+        # a sequence number to its global batch id via batch_of_seq)
+        self._next_seq = 0
+        self._sealed_seq = 0
+        self._prov_starts: List[int] = []        # chunk start seq per seal
+        self._prov_batches: List[np.ndarray] = []  # per-tx global batch ids
+        # per-batch L1 settlement refs: commit tx + (verify, execute) txs —
+        # arrival indices on a VectorChain L1, Tx objects on an object L1
+        self.batch_commit_ref: Dict[int, Any] = {}
+        self.batch_settle_ref: Dict[int, Any] = {}
+        self._init_events()
 
     # -- sequencing ------------------------------------------------------------
     def submit_arrays(self, batch: TxArrays):
+        """Queue a SoA batch; returns the ``[lo, hi)`` sequence-number
+        range assigned to it (this rollup's tx provenance namespace)."""
         if batch.fns is not self.fns:
             remap = np.array([self.fns.id(n) for n in batch.fns.names],
                              np.int32)
             batch = TxArrays(batch.submit_time, batch.gas,
                              remap[batch.fn_id] if len(batch) else
                              batch.fn_id, batch.sender_id, self.fns)
+        lo = self._next_seq
         self._pending.append(batch)
         self._pending_n += len(batch)
+        self._next_seq += len(batch)
+        return lo, lo + len(batch)
 
     def sender_id(self, sender: str) -> int:
         """Stable sender-name -> id mapping for this rollup's SoA stream
@@ -466,7 +509,16 @@ class VectorRollup:
         """Object-Tx compatibility shim."""
         batch = TxArrays.from_txs([tx], self.fns)
         batch.sender_id = np.array([self.sender_id(tx.sender)], np.int32)
-        self.submit_arrays(batch)
+        return self.submit_arrays(batch)
+
+    def batch_of_seq(self, seq: int) -> Optional[int]:
+        """Global batch id that sealed sequence number ``seq`` (None while
+        still pending).  Chunk-indexed: one bisect over seal chunks."""
+        if seq >= self._sealed_seq or seq < 0:
+            return None
+        import bisect
+        c = bisect.bisect_right(self._prov_starts, seq) - 1
+        return int(self._prov_batches[c][seq - self._prov_starts[c]])
 
     def _commit_gas_vectors(self):
         from repro.core.gas import commit_gas_vectors
@@ -528,6 +580,15 @@ class VectorRollup:
         self.update_digest = pallas_or_numpy_digest(words,
                                                     self.digest_backend)
 
+        first = self.n_batches
+        # tx->batch provenance: map each sealed tx (arrival order == seq
+        # order) to its global batch id, extending the seq->batch chunks
+        arrival_batch = np.empty(n, np.int64)
+        arrival_batch[order] = first + batch_id
+        self._prov_starts.append(self._sealed_seq)
+        self._prov_batches.append(arrival_batch)
+        self._sealed_seq += n
+
         # L1 commits: one tx per batch, Table-I-calibrated gas.  Lanes can
         # finish out of global time order; post commits time-sorted so the
         # L1's FIFO head-of-line rule never stalls on a later lane's commit
@@ -537,9 +598,11 @@ class VectorRollup:
             now[post].astype(np.float64), commit[post].astype(np.int64),
             np.full(nb, self.fns.id("rollup_commit"), np.int32),
             np.zeros(nb, np.int32), self.fns)
-        self._l1_submit(commit_batch)
-        first = self.n_batches
+        refs = self._l1_submit(commit_batch)
+        inv_post = np.empty(nb, np.int64)
+        inv_post[post] = np.arange(nb)
         for j in range(nb):
+            self.batch_commit_ref[first + j] = refs[int(inv_post[j])]
             self.gas_log.append({
                 "batch": first + j, "lane": int(lane_o[starts[j]]),
                 "n_txs": int(n_txs[j]), "commit": int(commit[j]),
@@ -547,17 +610,25 @@ class VectorRollup:
             self._unsettled_rows.append(len(self.gas_log) - 1)
         self.n_batches += nb
         self._last_time = float(now.max())
+        self._emit("batch_sealed", {
+            "first_batch": first, "n_batches": nb, "n_txs": n,
+            "digest": self.update_digest})
         return nb
 
-    def _l1_submit(self, batch: TxArrays):
+    def _l1_submit(self, batch: TxArrays) -> List[Any]:
+        """Submit to the L1; returns one settlement ref per tx — the L1
+        arrival index on a VectorChain, the submitted Tx on an object
+        Chain (both resolve to a block through the NodeClient)."""
         if getattr(self.l1, "soa_native", False):
-            self.l1.submit_arrays(batch)
-        else:                                   # object Chain fallback
-            from repro.core.ledger import Tx
-            for i in range(len(batch)):
-                self.l1.submit(Tx(batch.fns.names[batch.fn_id[i]],
-                                  "sequencer", {}, int(batch.gas[i]),
-                                  float(batch.submit_time[i])))
+            lo, hi = self.l1.submit_arrays(batch)
+            return list(range(lo, hi))
+        from repro.core.ledger import Tx                # object Chain
+        txs = [Tx(batch.fns.names[batch.fn_id[i]], "sequencer", {},
+                  int(batch.gas[i]), float(batch.submit_time[i]))
+               for i in range(len(batch))]
+        for tx in txs:
+            self.l1.submit(tx)
+        return txs
 
     # -- settlement ------------------------------------------------------------
     def flush(self):
@@ -587,13 +658,17 @@ class VectorRollup:
             np.array([self.fns.id("rollup_verify"),
                       self.fns.id("rollup_execute")], np.int32),
             np.zeros(2, np.int32), self.fns)
-        self._l1_submit(settle)
+        refs = tuple(self._l1_submit(settle))
         n = max(1, len(self._unsettled_rows))
         for row in rows:
             row["verify"] = verify / n
             row["execute"] = execute / n
             row["total"] = row["commit"] + row["verify"] + row["execute"]
+            self.batch_settle_ref[row["batch"]] = refs
         self._unsettled_rows = []
+        self._emit("session_settled", {
+            "n_batches": n, "verify": verify, "execute": execute,
+            "batches": [row["batch"] for row in rows]})
 
     # -- metrics ---------------------------------------------------------------
     def throughput(self, l1_tps: float) -> float:

@@ -54,6 +54,32 @@ class LedgerBackend(Protocol):
     def state_root(self) -> str: ...
 
 
+class EventHooks:
+    """Shared seal/settlement event plumbing for the rollup faces
+    (``Rollup``, ``engine.VectorRollup``; the sharded fabric overrides
+    ``subscribe`` to forward per-shard but reuses ``_emit``).
+
+    Subclasses call ``_init_events()`` from ``__init__`` and ``_emit``
+    at the event sites; the event vocabulary lives here once.
+    """
+
+    EVENTS = ("batch_sealed", "session_settled")
+
+    def _init_events(self):
+        self._subs: Dict[str, List[Callable]] = {}
+
+    def subscribe(self, event: str, callback: Callable) -> None:
+        """Register ``callback(payload)`` for ``"batch_sealed"`` (once
+        per seal, covering all batches sealed together) or
+        ``"session_settled"`` (once per amortized verify/execute)."""
+        assert event in self.EVENTS, event
+        self._subs.setdefault(event, []).append(callback)
+
+    def _emit(self, event: str, payload: Dict[str, Any]) -> None:
+        for cb in self._subs.get(event, ()):
+            cb(payload)
+
+
 def lift_tx_rows(txs, fns, sender_ids: List[int]):
     """Object->SoA adapter: one ``TxArrays`` over object ``Tx`` rows, with
     sender ids resolved in the TARGET's namespace (``TxArrays.from_txs``
@@ -132,11 +158,16 @@ class ObjectLedgerFace:
     def submit_arrays(self, batch):
         """SoA ingestion adapter: lower a TxArrays batch to object txs
         (small-N only — the vector engine is the path at scale).  Sender
-        ids are preserved, not re-minted (see ``_sender_name``)."""
-        for i in range(len(batch)):
-            self.submit(Tx(batch.fns.names[batch.fn_id[i]],
-                           self._sender_name(int(batch.sender_id[i])), {},
-                           int(batch.gas[i]), float(batch.submit_time[i])))
+        ids are preserved, not re-minted (see ``_sender_name``).  Returns
+        the lowered ``Tx`` objects (the object path's provenance handles,
+        the analogue of the vector faces' index/sequence ranges)."""
+        txs = [Tx(batch.fns.names[batch.fn_id[i]],
+                  self._sender_name(int(batch.sender_id[i])), {},
+                  int(batch.gas[i]), float(batch.submit_time[i]))
+               for i in range(len(batch))]
+        for tx in txs:
+            self.submit(tx)
+        return txs
 
 
 @dataclasses.dataclass
@@ -148,6 +179,7 @@ class Tx:
     submit_time: float
     tx_id: str = ""
     confirm_time: Optional[float] = None
+    block_height: Optional[int] = None    # set when packed into an L1 block
 
     def __post_init__(self):
         if not self.tx_id:
@@ -260,6 +292,7 @@ class Chain(ObjectLedgerFace):
         guard against that skew by submitting in sorted time order.
         """
         txs, gas_used = [], 0
+        height = len(self.blocks)
         while self.mempool:
             tx = self.mempool[0]
             if tx.submit_time > now:
@@ -273,11 +306,12 @@ class Chain(ObjectLedgerFace):
             if self._state_handlers:
                 self._apply_state_tx(tx)
             tx.confirm_time = now
+            tx.block_height = height
             txs.append(tx)
             gas_used += tx.gas
         # QBFT: 2/3 of validators sign; honest-majority assumption of the paper
         assert self.quorum(self.n_validators - self.n_validators // 3)
-        blk = Block(len(self.blocks), now, txs, gas_used,
+        blk = Block(height, now, txs, gas_used,
                     self.blocks[-1].block_hash)
         self.blocks.append(blk)
         self.total_gas += gas_used
@@ -290,35 +324,61 @@ class Chain(ObjectLedgerFace):
             self.produce_block(t)
 
 
+def _resolve_chain_spec(spec, engine, block_time, block_gas_limit,
+                        gas_table):
+    """spec wins and is exclusive; the loose kwargs (incl. the deprecated
+    ``engine=`` string flag) fold into a ChainSpec otherwise."""
+    from repro.api.specs import ChainSpec
+    if spec is not None:
+        if not (engine is None and block_time is None
+                and block_gas_limit is None and gas_table is None):
+            raise ValueError(
+                "pass either spec= or the loose chain kwargs, not both")
+        return spec
+    if engine is not None:
+        import warnings
+        warnings.warn("engine= is deprecated; pass "
+                      "spec=repro.api.ChainSpec(backend=...) "
+                      "(see docs/MIGRATION.md)", DeprecationWarning,
+                      stacklevel=3)
+    return ChainSpec(backend=engine or "vector",
+                     block_time=1.0 if block_time is None else block_time,
+                     block_gas_limit=(9_000_000 if block_gas_limit is None
+                                      else block_gas_limit),
+                     gas_table=gas_table if gas_table is not None
+                     else DEFAULT_GAS)
+
+
 def simulate_load(fn: str, send_rate: float, duration: float = 30.0,
-                  gas_table: GasTable = DEFAULT_GAS, seed: int = 0,
-                  block_time: float = 1.0,
-                  block_gas_limit: int = 9_000_000,
-                  engine: str = "vector") -> Dict[str, float]:
+                  gas_table: Optional[GasTable] = None, seed: int = 0,
+                  block_time: Optional[float] = None,
+                  block_gas_limit: Optional[int] = None,
+                  engine: Optional[str] = None, *,
+                  spec=None) -> Dict[str, float]:
     """Fig. 4 experiment: constant send rate of one function type.
 
-    ``engine="vector"`` (default) runs the SoA engine (engine.VectorChain);
-    ``engine="object"`` runs this module's per-Tx path.  Both draw the same
-    arrival times from the same rng stream and implement identical FIFO
-    packing semantics, so the metrics are numerically identical (pinned by
-    tests/test_engine.py); times are pre-sorted as the head-of-line guard
-    documented on ``Chain.produce_block``.
+    The chain is described by ``spec`` (an ``repro.api.ChainSpec``;
+    defaults to the vector backend).  ``spec.backend="vector"`` runs the
+    SoA engine (engine.VectorChain); ``"object"`` this module's per-Tx
+    path.  Both draw the same arrival times from the same rng stream and
+    implement identical FIFO packing semantics, so the metrics are
+    numerically identical (pinned by tests/test_engine.py); times are
+    pre-sorted as the head-of-line guard documented on
+    ``Chain.produce_block``.  ``engine=`` is the deprecated string form.
     """
+    spec = _resolve_chain_spec(spec, engine, block_time, block_gas_limit,
+                               gas_table)
+    from repro.api.factory import build_chain
     rng = np.random.default_rng(seed)
     n = int(send_rate * duration)
     times = np.sort(rng.uniform(0.0, duration, n))
-    gas = gas_table.l1_per_call[fn]
-    if engine == "vector":
-        from repro.core.engine import TxArrays, VectorChain
-        chain = VectorChain(block_time=block_time,
-                            block_gas_limit=block_gas_limit,
-                            gas_table=gas_table)
+    gas = spec.gas_table.l1_per_call[fn]
+    chain = build_chain(spec)
+    if spec.backend == "vector":
+        from repro.core.engine import TxArrays
         chain.submit_arrays(TxArrays.homogeneous(fn, times, gas))
         chain.run_until(duration)
         return chain.load_metrics(send_rate, duration)
-    assert engine == "object", f"unknown engine {engine!r}"
-    chain = Chain(block_time=block_time, block_gas_limit=block_gas_limit,
-                  gas_table=gas_table)
     for i, t in enumerate(times):
         chain.submit(Tx(fn, f"client{i % 64}", {}, gas, float(t)))
     # run long enough to drain what can be drained, then measure
@@ -334,25 +394,26 @@ def simulate_load(fn: str, send_rate: float, duration: float = 30.0,
             "confirmed": len(confirmed), "submitted": n}
 
 
-def simulate_workload(workload, block_time: float = 1.0,
-                      block_gas_limit: int = 9_000_000,
-                      gas_table: GasTable = DEFAULT_GAS,
-                      engine: str = "vector") -> Dict[str, float]:
-    """Run a workloads.Workload scenario through either engine and report
-    the Fig. 4-style throughput/latency metrics."""
+def simulate_workload(workload, block_time: Optional[float] = None,
+                      block_gas_limit: Optional[int] = None,
+                      gas_table: Optional[GasTable] = None,
+                      engine: Optional[str] = None, *,
+                      spec=None) -> Dict[str, float]:
+    """Run a workloads.Workload scenario (or an ``repro.api.WorkloadSpec``)
+    through the spec'd chain and report the Fig. 4-style metrics."""
+    spec = _resolve_chain_spec(spec, engine, block_time, block_gas_limit,
+                               gas_table)
+    if hasattr(workload, "build"):          # WorkloadSpec -> Workload
+        workload = workload.build()
     duration = workload.duration
-    if engine == "vector":
-        from repro.core.engine import VectorChain
-        chain = VectorChain(block_time=block_time,
-                            block_gas_limit=block_gas_limit,
-                            gas_table=gas_table, fns=workload.txs.fns)
+    from repro.api.factory import build_chain
+    if spec.backend == "vector":
+        chain = build_chain(spec, fns=workload.txs.fns)
         chain.submit_arrays(workload.txs)
         chain.run_until(duration)
         m = chain.load_metrics(len(workload) / max(duration, 1e-9), duration)
     else:
-        assert engine == "object", f"unknown engine {engine!r}"
-        chain = Chain(block_time=block_time,
-                      block_gas_limit=block_gas_limit, gas_table=gas_table)
+        chain = build_chain(spec)
         for t in workload.to_txs():
             chain.submit(t)
         chain.run_until(duration)

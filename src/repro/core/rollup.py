@@ -37,10 +37,8 @@ import dataclasses
 import hashlib
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
-from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable, l2_gas
-from repro.core.ledger import Chain, ObjectLedgerFace, Tx
+from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.ledger import Chain, EventHooks, ObjectLedgerFace, Tx
 from repro.core.state import canonical_bytes
 
 
@@ -78,7 +76,7 @@ class BatchProof:
         return state_digest(replay(pre_state)) == self.post_root
 
 
-class Rollup(ObjectLedgerFace):
+class Rollup(ObjectLedgerFace, EventHooks):
     """L2 sequencer + prover + L1 settlement."""
 
     def __init__(self, l1: Chain, batch_size: int = ROLLUP_BATCH,
@@ -104,6 +102,12 @@ class Rollup(ObjectLedgerFace):
         self._unsettled_rows: List[int] = []
         self._sealing = False
         self._last_time = 0.0
+        # tx->batch provenance + per-batch L1 refs (receipts): mirrors
+        # engine.VectorRollup's maps, keyed by tx_id on the object path
+        self.tx_batch: Dict[str, int] = {}
+        self.batch_commit_ref: Dict[int, Tx] = {}
+        self.batch_settle_ref: Dict[int, tuple] = {}
+        self._init_events()
 
     @property
     def _unsettled(self) -> int:
@@ -164,7 +168,12 @@ class Rollup(ObjectLedgerFace):
                                post_root, tx_root,
                                word_digest=self._word_digest(txs))
             self.batches.append(proof)
+            for t in txs:
+                self.tx_batch[t.tx_id] = proof.batch_id
             self._settle(proof, txs)
+            self._emit("batch_sealed", {
+                "first_batch": proof.batch_id, "n_batches": 1,
+                "n_txs": proof.n_txs, "digest": proof.word_digest})
         finally:
             self._sealing = False
         return proof
@@ -200,9 +209,11 @@ class Rollup(ObjectLedgerFace):
             + n * self.gas_table.commit_per_call.get(fn, 500)
             for fn, n in by_fn.items())
         now = max((t.submit_time for t in txs), default=0.0)
-        self.l1.submit(Tx("rollup_commit", "sequencer",
-                          {"batch": proof.batch_id,
-                           "root": proof.post_root}, commit, now))
+        commit_tx = Tx("rollup_commit", "sequencer",
+                       {"batch": proof.batch_id,
+                        "root": proof.post_root}, commit, now)
+        self.l1.submit(commit_tx)
+        self.batch_commit_ref[proof.batch_id] = commit_tx
         self.gas_log.append({"batch": proof.batch_id, "n_txs": proof.n_txs,
                              "commit": commit, "verify": 0, "execute": 0,
                              "total": commit})
@@ -224,16 +235,24 @@ class Rollup(ObjectLedgerFace):
                   else self.gas_table.verify_multi)
         execute = (self.gas_table.execute_single if single
                    else self.gas_table.execute_multi)
+        refs = []
         for phase, gas in (("verify", verify), ("execute", execute)):
-            self.l1.submit(Tx(f"rollup_{phase}", "sequencer",
-                              {"batches": len(self._unsettled_rows)}, gas,
-                              self._last_time))
+            settle_tx = Tx(f"rollup_{phase}", "sequencer",
+                           {"batches": len(self._unsettled_rows)}, gas,
+                           self._last_time)
+            self.l1.submit(settle_tx)
+            refs.append(settle_tx)
+        refs = tuple(refs)
         n = len(self._unsettled_rows)
         for row in rows:
             row["verify"] = verify / n
             row["execute"] = execute / n
             row["total"] = row["commit"] + row["verify"] + row["execute"]
+            self.batch_settle_ref[row["batch"]] = refs
         self._unsettled_rows = []
+        self._emit("session_settled", {
+            "n_batches": n, "verify": verify, "execute": execute,
+            "batches": [row["batch"] for row in rows]})
 
     # -- metrics ---------------------------------------------------------------
     def throughput(self, l1_tps: float) -> float:

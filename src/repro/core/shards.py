@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.engine import FnRegistry, TxArrays, VectorRollup
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.ledger import EventHooks
 from repro.core.state import StateArrays, account_owner
 
 
@@ -54,7 +55,7 @@ def _hash_route(sender_id: np.ndarray, n_shards: int) -> np.ndarray:
     return account_owner(sender_id, n_shards)
 
 
-class ShardedRollup:
+class ShardedRollup(EventHooks):
     """K-shard L2 fabric over one shared L1 (LedgerBackend face)."""
 
     soa_native = True
@@ -90,6 +91,19 @@ class ShardedRollup:
         self._task_counts = np.zeros(n_shards, np.int64)
         self._submitted = np.zeros(n_shards, np.int64)
         self.fabric_roots: List[Dict[str, Any]] = []
+        self._init_events()
+
+    # -- events (NodeClient subscription hook) ---------------------------------
+    def subscribe(self, event: str, callback: Callable) -> None:
+        """``"window_settled"`` fires once per fabric seal (payload = the
+        fabric-root record); ``"batch_sealed"``/``"session_settled"``
+        forward from every shard with a ``"shard"`` key added."""
+        if event == "window_settled":
+            self._subs.setdefault(event, []).append(callback)
+            return
+        for k, s in enumerate(self.shards):
+            s.subscribe(event,
+                        lambda payload, k=k: callback(dict(payload, shard=k)))
 
     # -- LedgerBackend surface -------------------------------------------------
     def sender_id(self, sender: str) -> int:
@@ -110,35 +124,45 @@ class ShardedRollup:
         """Object-Tx compatibility shim (fabric sender namespace)."""
         batch = TxArrays.from_txs([tx], self.fns)
         batch.sender_id = np.array([self.sender_id(tx.sender)], np.int32)
-        self.submit_arrays(batch)
+        return self.submit_arrays(batch)
 
     def submit_arrays(self, batch: TxArrays, shard: Optional[int] = None):
         """Route a SoA batch into the fabric.
 
         ``shard=k`` pins the whole batch (task-level routing); otherwise
         ``hash`` splits per tx by sender and ``least_loaded`` sends the
-        batch to the shard with the fewest submitted txs."""
+        batch to the shard with the fewest submitted txs.
+
+        Returns per-tx provenance in input order: ``(shard_of, seq_of)``
+        int64 arrays — the owning shard and the sequence number the shard
+        assigned (``VectorRollup.submit_arrays`` ranges), which receipts
+        resolve to batches via ``shards[k].batch_of_seq``."""
         if batch.fns is not self.fns:
             remap = np.array([self.fns.id(n) for n in batch.fns.names],
                              np.int32)
             batch = TxArrays(batch.submit_time, batch.gas,
                              remap[batch.fn_id] if len(batch) else
                              batch.fn_id, batch.sender_id, self.fns)
+        n = len(batch)
         if shard is None and self.route == "least_loaded":
             shard = int(np.argmin(self._submitted))
         if shard is not None or self.n_shards == 1:
             k = int(shard or 0)
-            self._submitted[k] += len(batch)
-            self.shards[k].submit_arrays(batch)
-            return
+            self._submitted[k] += n
+            lo, hi = self.shards[k].submit_arrays(batch)
+            return (np.full(n, k, np.int64),
+                    np.arange(lo, hi, dtype=np.int64))
         lanes = _hash_route(batch.sender_id, self.n_shards)
+        seq_of = np.empty(n, np.int64)
         for k in range(self.n_shards):
             m = lanes == k
             if m.any():
                 self._submitted[k] += int(m.sum())
-                self.shards[k].submit_arrays(TxArrays(
+                lo, hi = self.shards[k].submit_arrays(TxArrays(
                     batch.submit_time[m], batch.gas[m], batch.fn_id[m],
                     batch.sender_id[m], self.fns))
+                seq_of[m] = np.arange(lo, hi, dtype=np.int64)
+        return lanes.astype(np.int64), seq_of
 
     # -- task-level routing (protocol layer) -----------------------------------
     def assign_task(self, task_id: str) -> int:
@@ -163,8 +187,11 @@ class ShardedRollup:
         the K partition roots are merged into one fabric root — the
         cross-shard commitment for this window."""
         nb = sum(s.seal() for s in self.shards)
+        record: Dict[str, Any] = {"n_batches": nb}
         if self.state is not None:
-            self.fabric_roots.append(self._root_record(nb))
+            record = self._root_record(nb)
+            self.fabric_roots.append(record)
+        self._emit("window_settled", record)
         return nb
 
     @staticmethod

@@ -205,13 +205,17 @@ class Scheduler:
         self.runtimes: List[TaskRuntime] = []
         self._bg_pos = 0
 
-    def add_task(self, task_id: str, cohort, *, rounds: int = 5,
-                 reward: float = 10.0, n_select: Optional[int] = None,
-                 start_window: int = 0, init_seed: int = 0) -> TaskRuntime:
-        rt = TaskRuntime(self.node, task_id, cohort, rounds=rounds,
-                         reward=reward, n_select=n_select,
-                         init_seed=init_seed)
-        rt.start_window = start_window
+    def add_task(self, task, cohort, **task_kw) -> TaskRuntime:
+        """Register a task: ``task`` is an ``repro.api.FLTaskSpec`` (the
+        public form) or a task-id string with FLTaskSpec's fields as loose
+        kwargs (``rounds=``, ``reward=``, ``n_select=``, ``start_window=``,
+        ``init_seed=``) — defaults live on FLTaskSpec alone."""
+        from repro.api.specs import as_task_spec
+        task = as_task_spec(task, **task_kw)
+        rt = TaskRuntime(self.node, task.task_id, cohort, rounds=task.rounds,
+                         reward=task.reward, n_select=task.n_select,
+                         init_seed=task.init_seed)
+        rt.start_window = task.start_window
         self.runtimes.append(rt)
         return rt
 

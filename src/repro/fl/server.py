@@ -17,12 +17,11 @@ import numpy as np
 
 from repro.core.escrow import Escrow
 from repro.core.gas import DEFAULT_GAS
-from repro.core.ledger import AccessControl, Chain, Tx
+from repro.core.ledger import AccessControl, Tx
 from repro.core.oracle import DONConfig, ValidationSlices
 from repro.core.reputation import (ReputationParams, TrainerBook,
                                    end_of_multitask_update, init_book,
                                    sync_book_to_state)
-from repro.core.rollup import Rollup
 from repro.core.state import default_state_handlers
 from repro.core.storage import BlobStore
 from repro.core.tasks import TaskContract
@@ -38,50 +37,90 @@ class FLTaskResult:
 
 
 class AutoDFL:
-    """End-to-end protocol harness (the PoC the paper evaluates)."""
+    """End-to-end protocol harness (the PoC the paper evaluates).
+
+    Construction is spec-driven (``spec=repro.api.NodeSpec(...)`` — the
+    public path); the legacy flag kwargs (``engine=``, ``use_rollup=``,
+    ``n_shards=``, ``shard_route=``) still work for one release through
+    ``NodeSpec.from_legacy`` with a DeprecationWarning.  Both paths build
+    the ledger through ``repro.api.build_stack`` and are pinned
+    equivalent (same state root, same gas) by tests/test_api.py.
+    """
+
+    #: legacy ctor kwargs folded into NodeSpec.from_legacy, with defaults
+    _LEGACY_DEFAULTS = {"engine": "object", "use_rollup": True,
+                        "n_shards": 1, "shard_route": "hash",
+                        "trainer_funds": 10.0, "publisher_funds": 1000.0}
 
     def __init__(self, model, opt, n_trainers: int,
                  eval_fn: Callable, val_batch,
-                 rep_params: ReputationParams = ReputationParams(),
-                 don: DONConfig = DONConfig(), use_rollup: bool = True,
-                 use_pallas_agg: bool = False, seed: int = 0,
-                 engine: str = "object", trainer_funds: float = 10.0,
-                 publisher_funds: float = 1000.0, n_shards: int = 1,
-                 shard_route: str = "hash"):
+                 rep_params: Optional[ReputationParams] = None,
+                 don: Optional[DONConfig] = None,
+                 use_rollup: Optional[bool] = None,
+                 use_pallas_agg: Optional[bool] = None,
+                 seed: Optional[int] = None,
+                 engine: Optional[str] = None,
+                 trainer_funds: Optional[float] = None,
+                 publisher_funds: Optional[float] = None,
+                 n_shards: Optional[int] = None,
+                 shard_route: Optional[str] = None, *,
+                 spec: Optional["NodeSpec"] = None):
+        from repro.api.factory import build_stack
+        from repro.api.specs import NodeSpec
+        legacy = {k: v for k, v in {
+            "engine": engine, "use_rollup": use_rollup, "n_shards": n_shards,
+            "shard_route": shard_route, "trainer_funds": trainer_funds,
+            "publisher_funds": publisher_funds}.items() if v is not None}
+        if spec is None:
+            # deprecation shim: ledger-shape flags map onto a NodeSpec
+            # (rep_params/don/funds kwargs stay silent — they are protocol
+            # constants, not the flag wiring this shim retires)
+            flags = {k: v for k, v in legacy.items()
+                     if k in ("engine", "use_rollup", "n_shards",
+                              "shard_route")}
+            if flags:
+                import warnings
+                warnings.warn(
+                    f"AutoDFL kwargs {sorted(flags)} are deprecated; pass "
+                    f"spec=repro.api.NodeSpec(...) (see docs/MIGRATION.md)",
+                    DeprecationWarning, stacklevel=2)
+            spec = NodeSpec.from_legacy(
+                rep_params=rep_params, don=don, seed=seed or 0,
+                use_pallas_agg=bool(use_pallas_agg),
+                **{**self._LEGACY_DEFAULTS, **legacy})
+        else:
+            # spec wins wholesale — reject every kwarg it would shadow so
+            # nothing is silently dropped in a mixed call (ValueError, not
+            # assert: the guard must survive python -O)
+            if legacy or rep_params is not None or don is not None \
+                    or use_pallas_agg is not None or seed is not None:
+                raise ValueError(
+                    "pass either spec= or legacy kwargs, not both")
+            if spec.n_trainers not in (None, n_trainers):
+                raise ValueError(
+                    f"spec.n_trainers={spec.n_trainers} contradicts the "
+                    f"positional n_trainers={n_trainers}")
+        self.spec = spec
         self.model = model
         self.opt = opt
         self.eval_fn = eval_fn
         self.val_batch = val_batch
-        self.rep_params = rep_params
-        self.don = don
-        self.val_slices = ValidationSlices(val_batch, don.n_oracles)
-        self.use_rollup = use_rollup
-        self.use_pallas_agg = use_pallas_agg
+        # per-instance construction (a shared default ReputationParams()/
+        # DONConfig() instance across all nodes was the old footgun)
+        self.rep_params = spec.reputation.to_params()
+        self.don = spec.don.to_config()
+        trainer_funds = spec.trainer_funds
+        publisher_funds = spec.publisher_funds
+        self.val_slices = ValidationSlices(val_batch, self.don.n_oracles)
+        self.use_pallas_agg = spec.use_pallas_agg
 
         self.store = BlobStore()
         self.acl = AccessControl(["admin0", "admin1", "admin2"])
         self.escrow = Escrow()
         self.tsc = TaskContract(self.acl, self.escrow, self.store)
-        # engine="vector" swaps in the SoA hot path (core/engine.py); the
-        # object path stays the default for handler-rich small-N debugging.
-        if engine == "vector":
-            from repro.core.engine import VectorChain, VectorRollup
-            self.chain = VectorChain()
-            if not use_rollup:
-                self.rollup = None
-            elif n_shards > 1:
-                # sharded rollup fabric (core/shards.py): K sequencers
-                # over the one shared L1, task/hash routing, fabric root
-                from repro.core.shards import ShardedRollup
-                self.rollup = ShardedRollup(self.chain, n_shards=n_shards,
-                                            route=shard_route)
-            else:
-                self.rollup = VectorRollup(self.chain)
-        else:
-            assert engine == "object", f"unknown engine {engine!r}"
-            assert n_shards == 1, "sharding needs engine='vector'"
-            self.chain = Chain()
-            self.rollup = Rollup(self.chain) if use_rollup else None
+        # ONE construction path for all five ledger backends
+        self.chain, self.rollup = build_stack(spec)
+        self.use_rollup = self.rollup is not None
         self.book: TrainerBook = init_book(n_trainers)
         self.trainer_ids = [f"trainer{i}" for i in range(n_trainers)]
         self._trainer_idx = {t: i for i, t in enumerate(self.trainer_ids)}
@@ -113,6 +152,15 @@ class AutoDFL:
     # -- ledger helpers -----------------------------------------------------------
     def _target(self):
         return self.rollup if self.rollup is not None else self.chain
+
+    def client(self):
+        """RPC-style façade over this node's ledger (repro.api.NodeClient):
+        receipts, account views, state root, seal/settle events.  Shares
+        the node's ledger and clock origin."""
+        from repro.api.client import NodeClient
+        return NodeClient(self._target(), self.chain,
+                          gas_table=self.spec.chain.gas_table,
+                          clock_start=self._clock)
 
     def _wire_state(self) -> None:
         """Attach the fixed-schema SoA account state + the default
@@ -233,16 +281,21 @@ class AutoDFL:
         self._sync_fabric_state()
 
     # -- one full task (steps 1-16 of Fig. 1), driven sequentially ----------------
-    def run_task(self, task_id: str, agents, batch_fn=None, rounds: int = 5,
-                 reward: float = 10.0, n_select: Optional[int] = None
-                 ) -> FLTaskResult:
+    def run_task(self, task, agents, batch_fn=None,
+                 **task_kw) -> FLTaskResult:
         """Sequential single-task driver over the TaskRuntime state machine
         (``agents``: a list of TrainingAgents or a fl/cohort.py cohort).
-        ``Scheduler`` with this one task produces identical outputs — pinned
-        by tests/test_scheduler.py."""
+        ``task`` is an ``repro.api.FLTaskSpec`` or a task-id string with
+        FLTaskSpec's fields as loose kwargs (``rounds=``, ``reward=``,
+        ``n_select=``, ...) — defaults live on FLTaskSpec alone.
+        ``Scheduler`` with this one task produces identical outputs —
+        pinned by tests/test_scheduler.py."""
+        from repro.api.specs import as_task_spec
         from repro.fl.scheduler import TaskRuntime
-        rt = TaskRuntime(self, task_id, agents, rounds=rounds, reward=reward,
-                         n_select=n_select)
+        task = as_task_spec(task, **task_kw)
+        rt = TaskRuntime(self, task.task_id, agents, rounds=task.rounds,
+                         reward=task.reward, n_select=task.n_select,
+                         init_seed=task.init_seed)
         while rt.phase not in ("settle_ready", "done"):
             rt.step()
         self.settle_window([rt])
