@@ -46,6 +46,10 @@ _HEADLINES = {
         "scaling": d["scaling"],
         "shard_counts": d["shard_counts"],
         "state_root": d["state_root"]},
+    "BENCH_prover": lambda d: {
+        "verify_gas_reduction": d["reduction"],
+        "widths": d["widths"],
+        "backends": sorted(d["backends"])},
     "BENCH": lambda d: {
         "entries": sorted(d["results"])},
 }
@@ -108,8 +112,8 @@ def main() -> None:
         return
     from benchmarks import (bench_engine_speedup, bench_gas,
                             bench_l1_throughput, bench_l2_throughput,
-                            bench_latency, bench_protocol, bench_reputation,
-                            bench_roofline, bench_shards)
+                            bench_latency, bench_protocol, bench_prover,
+                            bench_reputation, bench_roofline, bench_shards)
 
     quick = os.environ.get("BENCH_QUICK", "") not in ("", "0", "false")
     results = {}
@@ -159,6 +163,16 @@ def main() -> None:
         print(f"shard_fabric_scaling,{us:.0f},"
               f"scaling={out['scaling']}x|shards={out['shard_counts'][-1]}"
               f"|state_root={out['state_root']}|quick=0")
+
+    if not quick:
+        # quick/CI mode skips this one: the dedicated bench-prover-smoke
+        # CI job already runs the reduced width sweep (running it here too
+        # would duplicate the compute and the artifact)
+        out, us = _timed(bench_prover.run, quick=False)
+        results["prover_aggregation_sweep"] = {"us_per_call": us, "out": out}
+        print(f"prover_aggregation_sweep,{us:.0f},"
+              f"verify_gas_reduction={out['reduction']}x"
+              f"|widths={out['widths'][-1]}|quick=0")
 
     if not quick:
         # quick/CI mode skips this one: the dedicated bench-protocol-smoke

@@ -23,24 +23,29 @@ from repro.optim.optimizers import OptimizerSpec, make_optimizer
 
 
 def api_demo():
-    """The public API path: typed spec -> client -> receipts + state."""
+    """The public API path: typed spec -> client -> receipts + events."""
     spec = NodeSpec(shards=ShardSpec(count=2))    # 2-shard L2 over one L1
     client = NodeClient.from_spec(spec)
-    sealed = []
-    client.subscribe("window_settled", sealed.append)
     receipts = [client.submit("submitLocalModel", f"trainer{i % 4}")
                 for i in range(25)]
-    client.flush()                                 # seal + settle the L2
+    client.flush()                                 # seal + prove + settle
     client.run_until(5.0)                          # L1 blocks to t=5s
     r = client.refresh(receipts[0])
     print(f"tx receipt: status={r.status} shard={r.shard} batch={r.batch} "
-          f"l1_block={r.block} gas={r.gas_breakdown['batch_total']:.0f}")
+          f"aggregate={r.aggregate_ref} l1_block={r.block} "
+          f"gas={r.gas_breakdown['batch_total']:.0f} "
+          f"verify_share={r.gas_breakdown['verify_share']:.1f}")
     acct = client.get_account("trainer0")
     print(f"account trainer0: submissions={acct.submissions} "
           f"reputation={acct.reputation:.2f}")
+    events = client.events()                       # typed, pull-based
+    kinds = sorted({e.kind for e in events})
+    windows = [e for e in events if e.kind == "window_settled"]
     print(f"state root: {client.state_root()}  "
-          f"(windows settled: {len(sealed)})")
-    assert r.status == "settled" and acct.submissions > 0 and sealed
+          f"(events: {kinds}, windows: {len(windows)})")
+    assert r.status == "finalized" and acct.submissions > 0 and windows
+    assert windows[-1].fabric_root
+    assert "block_packed" in client.capabilities()
 
 
 def main():

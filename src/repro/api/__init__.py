@@ -3,27 +3,35 @@
 This package is the supported entry point for building and driving
 nodes; everything else under ``repro.core``/``repro.fl`` is
 implementation.  See README "Public API" and docs/MIGRATION.md for the
-old-kwarg -> spec mapping.
+old-kwarg -> spec mapping and the subscribe -> events() migration.
 
     from repro.api import ChainSpec, NodeSpec, NodeClient, build_ledger
 
     client = NodeClient.from_spec(NodeSpec())      # vector L1 + rollup
     rcpt = client.submit("submitLocalModel", "trainer0")
     client.flush(); client.run_until(10.0)
-    rcpt = client.refresh(rcpt)                    # batch, gas, L1 block
+    rcpt = client.refresh(rcpt)      # finalized: batch, gas, L1 block,
+    for ev in client.events():       # proof/aggregate refs + the typed
+        ...                          # BatchSealed/ProofGenerated/... feed
 """
-from repro.api.client import AccountView, NodeClient, TxReceipt
+from repro.api.client import (RECEIPT_STATUSES, AccountView, NodeClient,
+                              TxReceipt)
 from repro.api.factory import (build_chain, build_ledger, build_node,
                                build_stack, l1_of)
 from repro.api.presets import PRESETS, describe_presets, preset
 from repro.api.specs import (ChainSpec, DONSpec, FLTaskSpec, NodeSpec,
-                             ReputationSpec, RollupSpec, ShardSpec,
-                             WorkloadSpec, as_task_spec)
+                             ProverSpec, ReputationSpec, RollupSpec,
+                             ShardSpec, WorkloadSpec, as_task_spec)
+from repro.core.events import (AggregateVerified, BatchSealed, BlockPacked,
+                               LedgerEvent, ProofGenerated, WindowSettled)
 
 __all__ = [
-    "AccountView", "NodeClient", "TxReceipt",
+    "AccountView", "NodeClient", "TxReceipt", "RECEIPT_STATUSES",
     "build_chain", "build_ledger", "build_node", "build_stack", "l1_of",
     "PRESETS", "describe_presets", "preset",
-    "ChainSpec", "DONSpec", "FLTaskSpec", "NodeSpec", "ReputationSpec",
-    "RollupSpec", "ShardSpec", "WorkloadSpec", "as_task_spec",
+    "ChainSpec", "DONSpec", "FLTaskSpec", "NodeSpec", "ProverSpec",
+    "ReputationSpec", "RollupSpec", "ShardSpec", "WorkloadSpec",
+    "as_task_spec",
+    "LedgerEvent", "BatchSealed", "ProofGenerated", "AggregateVerified",
+    "WindowSettled", "BlockPacked",
 ]

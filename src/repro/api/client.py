@@ -6,38 +6,53 @@ which of the five backends is underneath and speaks the vocabulary a
 rollup RPC would —
 
   * ``submit(fn, sender) -> TxReceipt``: a receipt with status, gas
-    breakdown, L2 batch id / L1 block, and the L1 settlement ref of the
-    batch that sealed the transaction.  ``refresh(receipt)`` re-resolves
-    it against the live ledger (receipts are cheap provenance handles,
-    not snapshots).
+    breakdown, L2 batch id / L1 block, proof/aggregate refs and the L1
+    settlement ref of the aggregate that finalized the transaction.
+    ``refresh(receipt)`` re-resolves it against the live ledger
+    (receipts are cheap provenance handles, not snapshots).
   * ``get_account(addr) -> AccountView``: balance / stake / reputation /
     protocol counters straight from the array-native account state
     (core/state.StateArrays).
   * ``state_root()``: the chunked state commitment.
-  * ``subscribe(event, cb)``: ``"batch_sealed"`` / ``"session_settled"``
-    on the rollup faces, plus ``"window_settled"`` (fabric-root records)
-    on the sharded fabric.
+  * ``events()``: pull-drain of the stack's typed event stream
+    (core/events.py — ``BatchSealed`` / ``ProofGenerated`` /
+    ``AggregateVerified`` / ``WindowSettled`` on rollup nodes,
+    ``BlockPacked`` everywhere including chain-only nodes);
+    ``capabilities()`` reports which event kinds the backend emits.
+    The string-keyed callback ``subscribe`` is kept one release as a
+    deprecation shim.
 
-Receipt statuses: ``pending`` (submitted, not sealed/confirmed) ->
-``sealed`` (in a committed L2 batch, session open) -> ``settled`` (the
-batch's amortized verify/execute posted to the L1).  On a chain-only
-node the ladder is ``pending`` -> ``confirmed`` (packed into a block).
+Receipt statuses (proof lifecycle, see ``RECEIPT_STATUSES``):
+``pending`` (submitted, not sealed/confirmed) -> ``sealed`` (in a
+committed L2 batch, proof job in flight) -> ``proved`` (the batch's
+proof drained through the modeled prover, aggregate not yet posted) ->
+``finalized`` (the aggregate's amortized verify/execute posted to the
+L1).  On a chain-only node the ladder is ``pending`` -> ``confirmed``
+(packed into a block).
 
 Gas accounting contract (pinned by tests/test_api.py): a receipt's
-``batch_*`` breakdown equals the ledger's own ``gas_log`` row, and the
+``batch_*`` breakdown equals the ledger's own ``gas_log`` row, the
 ``amortized`` per-tx share sums back to the ledger's accounted L2 gas
-over any full batch.
+over any full batch, and ``verify_share`` is the transaction's slice of
+the ONE L1 verify its aggregate posted (the tunable amortization lever,
+``repro.api.ProverSpec``).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.api.factory import build_ledger, l1_of
 from repro.api.specs import NodeSpec
+from repro.core.events import LedgerEvent
 from repro.core.gas import DEFAULT_GAS, L1_DEFAULT_GAS, GasTable
+
+#: the proof lifecycle a receipt walks (chain-only nodes use
+#: ``pending`` -> ``confirmed``)
+RECEIPT_STATUSES = ("pending", "sealed", "proved", "finalized", "confirmed")
 
 
 @dataclasses.dataclass
@@ -48,7 +63,7 @@ class TxReceipt:
     sender: str
     gas: int                       # intrinsic (L1-schedule) gas of the tx
     submit_time: float
-    status: str = "pending"        # pending | sealed | settled | confirmed
+    status: str = "pending"        # see RECEIPT_STATUSES
     seq: Optional[int] = None      # provenance in the target's namespace
     shard: Optional[int] = None    # owning shard (fabric only)
     batch: Optional[int] = None    # global L2 batch id
@@ -56,6 +71,8 @@ class TxReceipt:
     block_hash: Optional[str] = None
     l1_ref: Optional[Any] = None   # L1 settlement ref of the commit
     confirm_time: Optional[float] = None
+    proof_ref: Optional[int] = None      # the batch's proof job id
+    aggregate_ref: Optional[int] = None  # the posted aggregate proof id
     gas_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
     # object-path handle (the submitted Tx); excluded from equality so
     # receipts compare by provenance, not object identity
@@ -86,6 +103,7 @@ class NodeClient:
         self.chain = chain if chain is not None else l1_of(target)
         self.gas_table = gas_table
         self._clock = clock_start
+        self._event_cursor = 0          # per-client typed-event cursor
 
     @classmethod
     def from_spec(cls, spec: NodeSpec, wire_state: bool = True,
@@ -208,8 +226,19 @@ class NodeClient:
             "batch_total": float(row["total"]),
             "batch_n_txs": float(row["n_txs"]),
             "amortized": float(row["total"]) / n_txs,
+            # per-tx slice of the ONE L1 verify the batch's aggregate
+            # posted (0 until finalized) — the ProverSpec.agg_width lever
+            "verify_share": float(row["verify"]) / n_txs,
         }
-        r.status = "settled" if batch in ru.batch_settle_ref else "sealed"
+        r.proof_ref = row.get("job")
+        r.aggregate_ref = row.get("aggregate")
+        if batch in ru.batch_settle_ref:
+            r.status = "finalized"
+        else:
+            prover = getattr(ru, "prover", None)
+            phase = prover.phase_of(ru, batch) if prover is not None \
+                else None
+            r.status = phase if phase is not None else "sealed"
         ref = ru.batch_commit_ref.get(batch)
         r.l1_ref = getattr(ref, "tx_id", ref)
         if isinstance(ref, (int, np.integer)):        # VectorChain L1 index
@@ -269,13 +298,58 @@ class NodeClient:
         return self.target.state_root()
 
     # -- events ----------------------------------------------------------------
+    def _event_log(self):
+        log = getattr(self.target, "events", None)
+        return log if log is not None else getattr(self.chain, "events")
+
+    def capabilities(self) -> frozenset:
+        """Typed-event kinds this backend emits through ``events()``.
+
+        Every node emits ``block_packed`` (L1 block production); rollup
+        nodes add the proof lifecycle.  Use this instead of probing —
+        chain-only nodes are a smaller surface, not an error."""
+        caps = {"block_packed"}
+        if getattr(self.target, "prover", None) is not None:
+            caps |= {"batch_sealed", "proof_generated",
+                     "aggregate_verified", "window_settled"}
+        return frozenset(caps)
+
+    def events(self, kinds=None) -> List[LedgerEvent]:
+        """Drain the typed events emitted since this client's last call
+        (pull-based; cursors are per client, so independent consumers
+        see the full stream).  ``kinds``: optional iterable of event
+        kinds to keep — filtering still advances the cursor past
+        everything drained."""
+        log = self._event_log()
+        new = log.since(self._event_cursor)
+        self._event_cursor = log.next_cursor
+        if kinds is not None:
+            kinds = frozenset(kinds)
+            new = [e for e in new if e.kind in kinds]
+        return new
+
     def subscribe(self, event: str, callback: Callable) -> None:
-        """Events: ``batch_sealed`` / ``session_settled`` on any rollup
-        face, ``window_settled`` on the sharded fabric."""
-        sub = getattr(self.target, "subscribe", None)
-        if sub is None:
-            raise ValueError("chain-only node exposes no batch/window "
-                             "events; configure a RollupSpec")
+        """DEPRECATED one-release shim over the string-keyed callback
+        hooks (``batch_sealed``/``session_settled`` on rollup faces,
+        ``window_settled`` on the fabric, ``block_packed`` on the L1) —
+        drain typed events via ``events()`` instead."""
+        warnings.warn(
+            "NodeClient.subscribe is deprecated; drain typed events via "
+            "client.events() (see docs/MIGRATION.md)", DeprecationWarning,
+            stacklevel=2)
+        if event == "block_packed":
+            self.chain.subscribe(event, callback)
+            return
+        target = self.target
+        sub = getattr(target, "subscribe", None)
+        legacy = set(getattr(target, "EVENTS", ()))
+        if hasattr(target, "shards"):
+            legacy |= {"batch_sealed", "session_settled", "window_settled"}
+        if sub is None or event not in legacy:
+            raise ValueError(
+                f"event {event!r} is not a callback hook of this backend; "
+                f"typed stream capabilities: {sorted(self.capabilities())} "
+                f"(use client.events())")
         sub(event, callback)
 
     # -- lifecycle passthroughs ------------------------------------------------
@@ -291,6 +365,13 @@ class NodeClient:
             flush()
 
     def run_until(self, t_end: float) -> None:
-        """Drive L1 block production to ``t_end`` simulated seconds."""
+        """Drive the modeled prover's drain — and then L1 block
+        production — to ``t_end`` simulated seconds (the shared window
+        clock).  The prover pumps FIRST so that window-finalized
+        settlement transactions (stamped at their drain times <= t_end)
+        land in the mempool before the blocks that should pack them."""
+        pump = getattr(self.target, "pump", None)
+        if pump is not None:
+            pump(t_end)
         self.chain.run_until(t_end)
         self._clock = max(self._clock, t_end)

@@ -56,30 +56,36 @@ def build_stack(spec: LedgerSpec, *, fns=None, state=None
 
     ``state``: optional pre-built StateArrays for the sharded fabric.
     """
+    from repro.api.specs import ProverSpec
     node = _as_node_spec(spec)
     chain = build_chain(node.chain, fns=fns)
     ru = node.rollup
     if ru is None:
         return chain, None
+    pv = node.prover if node.prover is not None else ProverSpec()
+    prove_time = ru.prove_time if pv.prove_time is None else pv.prove_time
+    prover_kw = dict(agg_width=pv.agg_width, prover_capacity=pv.capacity,
+                     finalize=pv.finalize)
     if node.shards is not None and node.shards.wants_fabric:
         from repro.core.shards import ShardedRollup
         return chain, ShardedRollup(
             chain, n_shards=node.shards.count, batch_size=ru.batch_size,
-            gas_table=node.chain.gas_table, prove_time=ru.prove_time,
+            gas_table=node.chain.gas_table, prove_time=prove_time,
             per_tx_time=ru.per_tx_time, n_lanes=ru.n_lanes,
             digest_backend=ru.digest_backend, route=node.shards.route,
-            state=state)
+            state=state, **prover_kw)
     if node.chain.backend == "vector":
         from repro.core.engine import VectorRollup
         return chain, VectorRollup(
             chain, batch_size=ru.batch_size, gas_table=node.chain.gas_table,
-            prove_time=ru.prove_time, per_tx_time=ru.per_tx_time,
-            n_lanes=ru.n_lanes, digest_backend=ru.digest_backend)
+            prove_time=prove_time, per_tx_time=ru.per_tx_time,
+            n_lanes=ru.n_lanes, digest_backend=ru.digest_backend,
+            **prover_kw)
     from repro.core.rollup import Rollup
     return chain, Rollup(chain, batch_size=ru.batch_size,
                          gas_table=node.chain.gas_table,
-                         prove_time=ru.prove_time,
-                         per_tx_time=ru.per_tx_time)
+                         prove_time=prove_time,
+                         per_tx_time=ru.per_tx_time, **prover_kw)
 
 
 def build_ledger(spec: LedgerSpec, *, fns=None, state=None) -> LedgerBackend:

@@ -14,7 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict
 
-from repro.api.specs import ChainSpec, NodeSpec, ShardSpec, WorkloadSpec
+from repro.api.specs import (ChainSpec, NodeSpec, ProverSpec, ShardSpec,
+                             WorkloadSpec)
 
 #: the benchmark scenario catalog (immutable specs; override per point)
 PRESETS: Dict[str, NodeSpec] = {
@@ -33,6 +34,12 @@ PRESETS: Dict[str, NodeSpec] = {
     "shard-fabric": NodeSpec(shards=ShardSpec(count=8),
                              workload=WorkloadSpec.make(
                                  "mixed", 20_000.0, duration=10.0, seed=0)),
+    # bench_prover: the proof-aggregation sweep (agg_width overridden per
+    # point; the workload is settled in window-sized sessions)
+    "prover-pipeline": NodeSpec(prover=ProverSpec(agg_width=8),
+                                workload=WorkloadSpec.make(
+                                    "mixed", 4_000.0, duration=10.0,
+                                    seed=0)),
 }
 
 

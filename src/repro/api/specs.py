@@ -8,7 +8,9 @@ and a 13-kwarg ``AutoDFL.__init__``.  This module replaces that wiring
 with small frozen dataclasses, composed into a ``NodeSpec``:
 
   * ``ChainSpec``       — the L1 (QBFT parameters + which engine path)
-  * ``RollupSpec``      — the L2 sequencer (batch size, lanes, prover)
+  * ``RollupSpec``      — the L2 sequencer (batch size, lanes, timing)
+  * ``ProverSpec``      — the proof pipeline (aggregation width, prover
+    capacity/latency, eager vs. windowed finalization)
   * ``ShardSpec``       — the sharded fabric (shard count, routing)
   * ``ReputationSpec``  — paper Eq. 2-10 constants
   * ``DONSpec``         — decentralized-oracle-network quorum config
@@ -73,6 +75,44 @@ class RollupSpec:
     def __post_init__(self):
         if self.n_lanes < 1:
             raise ValueError("n_lanes must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProverSpec:
+    """Proof pipeline (core/prover.py): how sealed batches become one
+    verified L1 posting.
+
+    ``agg_width``: settle-sessions folded into one aggregate proof — the
+    single L1 verify amortizes across every batch of the aggregate (the
+    paper's 20X gas lever, tunable).  Width 1 posts at every
+    ``settle_session`` — bit-equivalent to the pre-pipeline settlement
+    path (pinned by tests/test_prover.py).
+
+    ``capacity``/``prove_time``: the modeled prover — ``capacity``
+    concurrent workers, ``prove_time`` seconds per batch proof
+    (``None`` inherits ``RollupSpec.prove_time``).  Jobs drain on the
+    shared window clock (``pump``/``NodeClient.run_until``).
+
+    ``finalize``: ``"eager"`` posts as soon as ``agg_width`` sessions
+    close; ``"window"`` defers posting to window-clock pumps, releasing
+    only aggregates whose proofs have fully drained (``flush`` always
+    forces the remainder).
+    """
+
+    agg_width: int = 1
+    capacity: int = 1
+    prove_time: Optional[float] = None
+    finalize: str = "eager"             # "eager" | "window"
+
+    def __post_init__(self):
+        from repro.core.prover import FINALIZE_MODES
+        if self.agg_width < 1:
+            raise ValueError("agg_width must be >= 1")
+        if self.capacity < 1:
+            raise ValueError("prover capacity must be >= 1")
+        if self.finalize not in FINALIZE_MODES:
+            raise ValueError(f"unknown finalize mode {self.finalize!r}; "
+                             f"choose from {FINALIZE_MODES}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,6 +239,7 @@ class NodeSpec:
     chain: ChainSpec = dataclasses.field(default_factory=ChainSpec)
     rollup: Optional[RollupSpec] = dataclasses.field(
         default_factory=RollupSpec)
+    prover: Optional[ProverSpec] = None     # None = default proof pipeline
     shards: Optional[ShardSpec] = None
     reputation: ReputationSpec = dataclasses.field(
         default_factory=ReputationSpec)
@@ -212,6 +253,9 @@ class NodeSpec:
     tasks: Tuple[FLTaskSpec, ...] = ()          # declarative task set
 
     def __post_init__(self):
+        if self.prover is not None and self.rollup is None:
+            raise ValueError("a ProverSpec needs a RollupSpec (the proof "
+                             "pipeline settles sealed L2 batches)")
         if self.shards is not None and self.shards.wants_fabric:
             if self.rollup is None:
                 raise ValueError("a sharded fabric needs a RollupSpec")

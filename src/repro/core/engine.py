@@ -35,8 +35,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.events import BatchSealed, BlockPacked, EventLog
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
 from repro.core.ledger import EventHooks
+from repro.core.prover import ProverFace, ProverPipeline, session_latency
 from repro.core.state import MIX_MULT as DIGEST_MULT
 from repro.core.state import MIX_SEED as DIGEST_SEED
 from repro.core.state import Registry
@@ -72,16 +74,14 @@ def xor_fold_digest_segments(words: np.ndarray,
 
 def pallas_or_numpy_digest(words: np.ndarray, backend: str = "auto") -> int:
     """Route the merged word buffer through the Pallas kernel (TPU) or the
-    NumPy mirror (CPU).  backend: "auto" | "pallas" | "numpy"."""
+    NumPy mirror (CPU).  backend: "auto" | "pallas" | "numpy".  The TPU
+    probe is cached process-wide (state.tpu_digest_backend) — probing
+    jax per seal dominated the digest itself on CPU."""
     if backend == "numpy":
         return xor_fold_digest(words)
     if backend == "auto":
-        try:
-            import jax
-            use_pallas = jax.default_backend() == "tpu"
-        except Exception:  # pragma: no cover - jax always present in-tree
-            use_pallas = False
-        if not use_pallas:
+        from repro.core.state import tpu_digest_backend
+        if not tpu_digest_backend():
             return xor_fold_digest(words)
     import jax.numpy as jnp
     from repro.kernels.ops import rollup_digest
@@ -170,9 +170,11 @@ class BlockStats:
             self.block_hash = h[:16]
 
 
-class VectorChain:
+class VectorChain(EventHooks):
     """Vectorized mirror of ``ledger.Chain``: QBFT quorum, gas-limited FIFO
     block packing over SoA arrays, O(log n) per block."""
+
+    EVENTS = ("block_packed",)
 
     # SoA is this face's NATIVE path (emitters dispatch batched emission on
     # this flag, not on submit_arrays presence — the object faces expose a
@@ -217,6 +219,9 @@ class VectorChain:
         self._staged: List[TxArrays] = []
         self._staged_n = 0
         self._block_stops = np.empty(0, np.int64)   # block_of lookup cache
+        # the stack-wide typed event stream (L1-owned; L2 faces adopt it)
+        self.events = EventLog()
+        self._init_events()
 
     # -- contract surface ------------------------------------------------------
     def register_batch(self, fn: str, handler: Callable):
@@ -373,6 +378,12 @@ class VectorChain:
         self.blocks.append(blk)
         self.total_gas += gas_used
         self._ptr = stop
+        self.events.emit(BlockPacked, time=now, height=blk.height,
+                         n_txs=blk.n_txs, gas_used=gas_used,
+                         block_hash=blk.block_hash)
+        self._emit("block_packed", {"height": blk.height, "n_txs": blk.n_txs,
+                                    "gas_used": gas_used,
+                                    "block_hash": blk.block_hash})
         return blk
 
     def run_until(self, t_end: float):
@@ -408,7 +419,7 @@ class VectorChain:
                 "submitted": self.n_submitted}
 
 
-class VectorRollup(EventHooks):
+class VectorRollup(ProverFace, EventHooks):
     """Vectorized mirror of ``rollup.Rollup`` with a multi-lane sequencer.
 
     Transactions stripe round-robin across ``n_lanes`` lanes; each lane cuts
@@ -424,7 +435,10 @@ class VectorRollup(EventHooks):
     def __init__(self, l1, batch_size: int = ROLLUP_BATCH,
                  gas_table: GasTable = DEFAULT_GAS,
                  prove_time: float = 0.9, per_tx_time: float = 0.14,
-                 n_lanes: int = 1, digest_backend: str = "auto"):
+                 n_lanes: int = 1, digest_backend: str = "auto",
+                 agg_width: int = 1, prover_capacity: int = 1,
+                 finalize: str = "eager",
+                 prover: Optional[ProverPipeline] = None):
         assert n_lanes >= 1
         self.l1 = l1
         self.batch_size = batch_size
@@ -433,6 +447,10 @@ class VectorRollup(EventHooks):
         self.per_tx_time = per_tx_time
         self.n_lanes = n_lanes
         self.digest_backend = digest_backend
+        # event-log adoption + settlement-pipeline wiring (ONE copy for
+        # both rollup faces — see prover.ProverFace)
+        self._init_prover_face(l1, gas_table, prove_time, agg_width,
+                               prover_capacity, finalize, prover)
         # share the L1's registry when it has one (`or` would discard an
         # empty-but-present registry: FnRegistry defines __len__)
         l1_fns = getattr(l1, "fns", None)
@@ -448,7 +466,6 @@ class VectorRollup(EventHooks):
         self.n_batches = 0
         self._pending: List[TxArrays] = []
         self._pending_n = 0
-        self._unsettled_rows: List[int] = []
         self._last_time = 0.0
         # tx->batch provenance: submission order IS seal order, so the
         # seq->batch map extends chunk-wise at each seal (receipts resolve
@@ -531,9 +548,12 @@ class VectorRollup(EventHooks):
         (fn -> count) histograms (commit gas), per-batch max submit_time
         (the L1 commit timestamp), and per-batch xor-roots; the merged word
         buffer of the whole seal is folded through the rollup_digest kernel
-        path (Pallas on TPU, bit-exact NumPy mirror on CPU).
+        path (Pallas on TPU, bit-exact NumPy mirror on CPU).  Sealed
+        batches enqueue proof jobs on the prover pipeline; settlement
+        (verify/execute) happens there (core/prover.py).
         """
         if not self._pending:
+            self._emit_window(0)
             return 0
         txs = (self._pending[0] if len(self._pending) == 1 else
                TxArrays(np.concatenate([b.submit_time for b in self._pending]),
@@ -601,18 +621,24 @@ class VectorRollup(EventHooks):
         refs = self._l1_submit(commit_batch)
         inv_post = np.empty(nb, np.int64)
         inv_post[post] = np.arange(nb)
+        rows = []
         for j in range(nb):
             self.batch_commit_ref[first + j] = refs[int(inv_post[j])]
-            self.gas_log.append({
+            rows.append({
                 "batch": first + j, "lane": int(lane_o[starts[j]]),
                 "n_txs": int(n_txs[j]), "commit": int(commit[j]),
                 "verify": 0, "execute": 0, "total": int(commit[j])})
-            self._unsettled_rows.append(len(self.gas_log) - 1)
+        self.gas_log.extend(rows)
         self.n_batches += nb
         self._last_time = float(now.max())
+        self.prover.enqueue(self, first, roots, n_txs, now, rows)
+        self.events.emit(BatchSealed, time=self._last_time,
+                         shard=self._event_shard, first_batch=first,
+                         n_batches=nb, n_txs=n, digest=self.update_digest)
         self._emit("batch_sealed", {
             "first_batch": first, "n_batches": nb, "n_txs": n,
             "digest": self.update_digest})
+        self._emit_window(nb)
         return nb
 
     def _l1_submit(self, batch: TxArrays) -> List[Any]:
@@ -630,45 +656,22 @@ class VectorRollup(EventHooks):
             self.l1.submit(tx)
         return txs
 
-    # -- settlement ------------------------------------------------------------
+    # -- settlement (routed through the shared prover pipeline) -----------------
     def flush(self):
         self.seal()
         self.settle_session()
+        self.prover.drain(self)
 
-    def settle_session(self):
-        """One amortized verify + execute for every unsettled batch row
-        (across all lanes).  Amortization is tracked by explicit row
-        indices, so truncating ``gas_log`` between sessions cannot skew a
-        later session's rows (see Rollup._settle_session)."""
-        if not self._unsettled_rows:
-            return
-        rows = [self.gas_log[i] for i in self._unsettled_rows
-                if i < len(self.gas_log)]
-        # same predicate as Rollup._settle_session (session batch COUNT, not
-        # surviving rows) so both engines pick the same verify/execute gas
-        single = len(self._unsettled_rows) == 1 and \
-            (rows and rows[0]["n_txs"] <= 5)
-        verify = (self.gas_table.verify_single if single
-                  else self.gas_table.verify_multi)
-        execute = (self.gas_table.execute_single if single
-                   else self.gas_table.execute_multi)
+    def _post_settlement(self, verify: int, execute: int, at: float,
+                         n_batches: int):
+        """Prover callback: post one verify + execute pair to the L1."""
         settle = TxArrays(
-            np.full(2, self._last_time),
+            np.full(2, at),
             np.array([verify, execute], np.int64),
             np.array([self.fns.id("rollup_verify"),
                       self.fns.id("rollup_execute")], np.int32),
             np.zeros(2, np.int32), self.fns)
-        refs = tuple(self._l1_submit(settle))
-        n = max(1, len(self._unsettled_rows))
-        for row in rows:
-            row["verify"] = verify / n
-            row["execute"] = execute / n
-            row["total"] = row["commit"] + row["verify"] + row["execute"]
-            self.batch_settle_ref[row["batch"]] = refs
-        self._unsettled_rows = []
-        self._emit("session_settled", {
-            "n_batches": n, "verify": verify, "execute": execute,
-            "batches": [row["batch"] for row in rows]})
+        return tuple(self._l1_submit(settle))
 
     # -- metrics ---------------------------------------------------------------
     def throughput(self, l1_tps: float) -> float:
@@ -676,9 +679,11 @@ class VectorRollup(EventHooks):
         return self.n_lanes * self.batch_size * l1_tps
 
     def latency(self, n_calls: int) -> float:
-        """Table-II latency model; lanes sequence concurrently, so the
-        session latency is the slowest lane's (ceil-split) share."""
-        import math
-        per_lane = math.ceil(n_calls / self.n_lanes)
-        nb = max(1, math.ceil(per_lane / self.batch_size))
-        return nb * self.prove_time + per_lane * self.per_tx_time
+        """Table-II latency model (prover.session_latency — ONE formula
+        shared with the object face); lanes sequence concurrently, so
+        the session latency is the slowest lane's (ceil-split) share."""
+        return session_latency(n_calls, batch_size=self.batch_size,
+                               prove_time=self.prove_time,
+                               per_tx_time=self.per_tx_time,
+                               n_lanes=self.n_lanes,
+                               capacity=self.prover.capacity)

@@ -1,0 +1,145 @@
+"""Typed ledger events + the shared per-stack event log.
+
+The PR-4 event surface was a string-keyed callback ``subscribe`` that
+existed only on the rollup faces and pushed loose dict payloads.  This
+module replaces it with
+
+  * small frozen **event dataclasses** — one per lifecycle stage of the
+    proof pipeline (``BatchSealed`` -> ``ProofGenerated`` ->
+    ``AggregateVerified``), plus the window commitment
+    (``WindowSettled``) and L1 block production (``BlockPacked``), and
+  * an ``EventLog`` — ONE append-only, totally ordered stream per ledger
+    stack.  The L1 chain owns the log; every rollup face built on top of
+    it (``VectorRollup``, ``Rollup``, the sharded fabric and its shards)
+    adopts the same instance, so L1 and L2 events interleave in emission
+    order under a single monotonic ``seq``.
+
+Consumption is pull-based: readers keep a cursor and drain
+``log.since(cursor)`` (the public face is ``repro.api.NodeClient.
+events()``).  Events are plain data — safe to hold, compare and
+serialize; ``shard`` tags fabric-side events with the owning shard and
+stays ``None`` on unsharded faces.  The callback ``subscribe`` API is
+kept for one release as a deprecation shim over the same emission sites
+(see repro.api.NodeClient.subscribe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, List, Optional, Tuple, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerEvent:
+    """Base event: total order (``seq``), simulated time, shard tag."""
+
+    seq: int
+    time: float
+    shard: Optional[int]
+
+    kind: ClassVar[str] = "event"
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSealed(LedgerEvent):
+    """One seal pass committed ``n_batches`` L2 batches to the L1."""
+
+    first_batch: int
+    n_batches: int
+    n_txs: int
+    digest: int                  # merged update-buffer xor-mix digest
+
+    kind: ClassVar[str] = "batch_sealed"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProofGenerated(LedgerEvent):
+    """A batch's proof job completed (modeled prover drain).
+
+    ``time`` is the modeled completion time (``sealed_at`` + queueing
+    under the prover's capacity + prove latency).
+    """
+
+    job: int
+    batch: int
+    n_txs: int
+    digest: int                  # the batch's tx xor-root
+    sealed_at: float
+
+    kind: ClassVar[str] = "proof_generated"
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateVerified(LedgerEvent):
+    """An aggregate proof's single verify+execute posted to the L1.
+
+    The recursive-aggregation product: ``n_sessions`` session proofs
+    (each folding its batches' digests) folded into one digest, whose L1
+    verify gas is amortized across every batch in ``batches``.
+    """
+
+    aggregate: int
+    n_sessions: int
+    batches: Tuple[int, ...]
+    n_txs: int
+    verify: int
+    execute: int
+    digest: int                  # recursive fold of the session digests
+
+    kind: ClassVar[str] = "aggregate_verified"
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSettled(LedgerEvent):
+    """A window boundary sealed: the backend's state commitment record.
+
+    Emitted once per ``seal()`` on every rollup face.  On the sharded
+    fabric it carries the merged fabric root and the per-shard partition
+    roots; on unsharded faces those fields stay empty.
+    """
+
+    window: int
+    n_batches: int
+    state_root: str
+    fabric_root: str = ""
+    shard_roots: Tuple[str, ...] = ()
+
+    kind: ClassVar[str] = "window_settled"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPacked(LedgerEvent):
+    """The L1 packed one block (chain-only nodes' event stream)."""
+
+    height: int
+    n_txs: int
+    gas_used: int
+    block_hash: str
+
+    kind: ClassVar[str] = "block_packed"
+
+
+class EventLog:
+    """Append-only, totally ordered typed event stream for one stack.
+
+    ``emit`` assigns the next ``seq`` and returns the constructed event;
+    readers drain with ``since(cursor)`` + ``next_cursor`` (cursors live
+    with the reader, so independent consumers never steal each other's
+    events).
+    """
+
+    def __init__(self):
+        self._events: List[LedgerEvent] = []
+
+    def emit(self, cls: Type[LedgerEvent], *, time: float,
+             shard: Optional[int] = None, **fields) -> LedgerEvent:
+        ev = cls(seq=len(self._events), time=float(time), shard=shard,
+                 **fields)
+        self._events.append(ev)
+        return ev
+
+    def since(self, cursor: int) -> List[LedgerEvent]:
+        return self._events[cursor:]
+
+    @property
+    def next_cursor(self) -> int:
+        return len(self._events)

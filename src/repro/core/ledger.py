@@ -17,6 +17,7 @@ from typing import (Any, Callable, Dict, List, Optional, Protocol,
 
 import numpy as np
 
+from repro.core.events import BlockPacked, EventLog
 from repro.core.gas import DEFAULT_GAS, GasTable
 
 ROLES = ("admin", "task_publisher", "trainer", "evaluator", "aggregator",
@@ -55,9 +56,14 @@ class LedgerBackend(Protocol):
 
 
 class EventHooks:
-    """Shared seal/settlement event plumbing for the rollup faces
-    (``Rollup``, ``engine.VectorRollup``; the sharded fabric overrides
-    ``subscribe`` to forward per-shard but reuses ``_emit``).
+    """Legacy string-keyed callback plumbing (``Rollup``,
+    ``engine.VectorRollup``; the sharded fabric overrides ``subscribe``
+    to forward per-shard but reuses ``_emit``; the chains override
+    ``EVENTS`` with their block vocabulary).
+
+    One-release deprecation shim: the supported surface is the typed
+    event stream (core/events.py) drained through
+    ``repro.api.NodeClient.events()`` — the emission sites feed both.
 
     Subclasses call ``_init_events()`` from ``__init__`` and ``_emit``
     at the event sites; the event vocabulary lives here once.
@@ -251,8 +257,10 @@ class AccessControl:
         return False
 
 
-class Chain(ObjectLedgerFace):
+class Chain(ObjectLedgerFace, EventHooks):
     """Gas-limited block production with a QBFT-style quorum check."""
+
+    EVENTS = ("block_packed",)
 
     def __init__(self, n_validators: int = 4, block_time: float = 1.0,
                  block_gas_limit: int = 9_000_000,
@@ -267,6 +275,10 @@ class Chain(ObjectLedgerFace):
         self.state: Dict[str, Any] = {}
         self._handlers: Dict[str, Callable] = {}
         self.total_gas = 0
+        # the stack-wide typed event stream: the L1 owns it, every L2
+        # face built on this chain adopts the same log (core/events.py)
+        self.events = EventLog()
+        self._init_events()
         self._init_object_face()
 
     # -- contract surface ------------------------------------------------------
@@ -315,6 +327,12 @@ class Chain(ObjectLedgerFace):
                     self.blocks[-1].block_hash)
         self.blocks.append(blk)
         self.total_gas += gas_used
+        self.events.emit(BlockPacked, time=now, height=blk.height,
+                         n_txs=len(txs), gas_used=gas_used,
+                         block_hash=blk.block_hash)
+        self._emit("block_packed", {"height": blk.height, "n_txs": len(txs),
+                                    "gas_used": gas_used,
+                                    "block_hash": blk.block_hash})
         return blk
 
     def run_until(self, t_end: float):

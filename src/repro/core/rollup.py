@@ -37,8 +37,10 @@ import dataclasses
 import hashlib
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core.events import BatchSealed
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
 from repro.core.ledger import Chain, EventHooks, ObjectLedgerFace, Tx
+from repro.core.prover import ProverFace, ProverPipeline, session_latency
 from repro.core.state import canonical_bytes
 
 
@@ -76,12 +78,15 @@ class BatchProof:
         return state_digest(replay(pre_state)) == self.post_root
 
 
-class Rollup(ObjectLedgerFace, EventHooks):
+class Rollup(ObjectLedgerFace, ProverFace, EventHooks):
     """L2 sequencer + prover + L1 settlement."""
 
     def __init__(self, l1: Chain, batch_size: int = ROLLUP_BATCH,
                  gas_table: GasTable = DEFAULT_GAS,
-                 prove_time: float = 0.9, per_tx_time: float = 0.14):
+                 prove_time: float = 0.9, per_tx_time: float = 0.14,
+                 agg_width: int = 1, prover_capacity: int = 1,
+                 finalize: str = "eager",
+                 prover: Optional[ProverPipeline] = None):
         self.l1 = l1
         self.batch_size = batch_size
         self.gas_table = gas_table
@@ -96,10 +101,6 @@ class Rollup(ObjectLedgerFace, EventHooks):
         self.pending: List[Tx] = []
         self.batches: List[BatchProof] = []
         self.gas_log: List[Dict[str, Any]] = []
-        # indices into gas_log of batch rows committed but not yet settled;
-        # len(...) is the session's batch count (the old scalar counter
-        # mis-amortized when gas_log was truncated between sessions)
-        self._unsettled_rows: List[int] = []
         self._sealing = False
         self._last_time = 0.0
         # tx->batch provenance + per-batch L1 refs (receipts): mirrors
@@ -108,10 +109,12 @@ class Rollup(ObjectLedgerFace, EventHooks):
         self.batch_commit_ref: Dict[int, Tx] = {}
         self.batch_settle_ref: Dict[int, tuple] = {}
         self._init_events()
-
-    @property
-    def _unsettled(self) -> int:
-        return len(self._unsettled_rows)
+        # event-log adoption + settlement-pipeline wiring (ONE copy for
+        # both rollup faces — see prover.ProverFace; the verify/execute
+        # bookkeeping that used to live here as _settle_session is the
+        # pipeline's now)
+        self._init_prover_face(l1, gas_table, prove_time, agg_width,
+                               prover_capacity, finalize, prover)
 
     def register(self, fn: str, handler: Callable):
         self._handlers[fn] = handler
@@ -140,6 +143,7 @@ class Rollup(ObjectLedgerFace, EventHooks):
             if self.seal_batch() is None:
                 break
             nb += 1
+        self._emit_window(nb)
         return nb
 
     def seal_batch(self) -> Optional[BatchProof]:
@@ -170,7 +174,15 @@ class Rollup(ObjectLedgerFace, EventHooks):
             self.batches.append(proof)
             for t in txs:
                 self.tx_batch[t.tx_id] = proof.batch_id
-            self._settle(proof, txs)
+            row = self._settle(proof, txs)
+            # one proof job per sealed batch (settlement lives in the
+            # pipeline; see core/prover.py)
+            self.prover.enqueue(self, proof.batch_id, [proof.word_digest],
+                                [proof.n_txs], [self._last_time], [row])
+            self.events.emit(BatchSealed, time=self._last_time,
+                             shard=self._event_shard,
+                             first_batch=proof.batch_id, n_batches=1,
+                             n_txs=proof.n_txs, digest=proof.word_digest)
             self._emit("batch_sealed", {
                 "first_batch": proof.batch_id, "n_batches": 1,
                 "n_txs": proof.n_txs, "digest": proof.word_digest})
@@ -193,14 +205,14 @@ class Rollup(ObjectLedgerFace, EventHooks):
             # here would split the session in two (double verify/execute)
             # with the settlement timestamped before the outer commit.
             return
-        while self.pending:
-            self.seal_batch()
-        self._settle_session()
+        self.seal()
+        self.settle_session()
+        self.prover.drain(self)
 
-    # -- L1 settlement: commit per batch; verify+execute once per session
+    # -- L1 settlement: commit per batch; verify+execute once per aggregate
     # (zkSync-style proof aggregation — matches Table I, where Verify and
     # Execute stay ~constant even at 5 batches) ---------------------------------
-    def _settle(self, proof: BatchProof, txs: List[Tx]):
+    def _settle(self, proof: BatchProof, txs: List[Tx]) -> Dict[str, Any]:
         by_fn: Dict[str, int] = {}
         for t in txs:
             by_fn[t.fn] = by_fn.get(t.fn, 0) + 1
@@ -214,45 +226,23 @@ class Rollup(ObjectLedgerFace, EventHooks):
                         "root": proof.post_root}, commit, now)
         self.l1.submit(commit_tx)
         self.batch_commit_ref[proof.batch_id] = commit_tx
-        self.gas_log.append({"batch": proof.batch_id, "n_txs": proof.n_txs,
-                             "commit": commit, "verify": 0, "execute": 0,
-                             "total": commit})
-        self._unsettled_rows.append(len(self.gas_log) - 1)
+        row = {"batch": proof.batch_id, "n_txs": proof.n_txs,
+               "commit": commit, "verify": 0, "execute": 0,
+               "total": commit}
+        self.gas_log.append(row)
         self._last_time = now
+        return row
 
-    def _settle_session(self):
-        if not self._unsettled_rows:
-            return
-        # amortise over the rows committed THIS session, addressed by index:
-        # slicing gas_log[-n:] instead mis-attributed verify/execute to a
-        # previous session's rows whenever gas_log had been truncated (e.g.
-        # cleared to bound memory) and n exceeded what remained.
-        rows = [self.gas_log[i] for i in self._unsettled_rows
-                if i < len(self.gas_log)]
-        single = len(self._unsettled_rows) == 1 and \
-            (rows and rows[0]["n_txs"] <= 5)
-        verify = (self.gas_table.verify_single if single
-                  else self.gas_table.verify_multi)
-        execute = (self.gas_table.execute_single if single
-                   else self.gas_table.execute_multi)
+    def _post_settlement(self, verify: int, execute: int, at: float,
+                         n_batches: int):
+        """Prover callback: post one verify + execute pair to the L1."""
         refs = []
         for phase, gas in (("verify", verify), ("execute", execute)):
             settle_tx = Tx(f"rollup_{phase}", "sequencer",
-                           {"batches": len(self._unsettled_rows)}, gas,
-                           self._last_time)
+                           {"batches": n_batches}, gas, at)
             self.l1.submit(settle_tx)
             refs.append(settle_tx)
-        refs = tuple(refs)
-        n = len(self._unsettled_rows)
-        for row in rows:
-            row["verify"] = verify / n
-            row["execute"] = execute / n
-            row["total"] = row["commit"] + row["verify"] + row["execute"]
-            self.batch_settle_ref[row["batch"]] = refs
-        self._unsettled_rows = []
-        self._emit("session_settled", {
-            "n_batches": n, "verify": verify, "execute": execute,
-            "batches": [row["batch"] for row in rows]})
+        return tuple(refs)
 
     # -- metrics ---------------------------------------------------------------
     def throughput(self, l1_tps: float) -> float:
@@ -260,7 +250,10 @@ class Rollup(ObjectLedgerFace, EventHooks):
         return self.batch_size * l1_tps
 
     def latency(self, n_calls: int) -> float:
-        """End-to-end L2 latency model calibrated to Table II."""
-        import math
-        nb = max(1, math.ceil(n_calls / self.batch_size))
-        return nb * self.prove_time + n_calls * self.per_tx_time
+        """End-to-end L2 latency model calibrated to Table II
+        (prover.session_latency — ONE formula shared with the vector
+        face, so identical specs model identical prove/settle timing)."""
+        return session_latency(n_calls, batch_size=self.batch_size,
+                               prove_time=self.prove_time,
+                               per_tx_time=self.per_tx_time,
+                               capacity=self.prover.capacity)

@@ -42,8 +42,10 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.engine import FnRegistry, TxArrays, VectorRollup
+from repro.core.events import EventLog, WindowSettled
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
 from repro.core.ledger import EventHooks
+from repro.core.prover import ProverPipeline
 from repro.core.state import StateArrays, account_owner
 
 
@@ -66,7 +68,9 @@ class ShardedRollup(EventHooks):
                  prove_time: float = 0.9, per_tx_time: float = 0.14,
                  n_lanes: int = 1, digest_backend: str = "auto",
                  route: str = "hash",
-                 state: Optional[StateArrays] = None):
+                 state: Optional[StateArrays] = None,
+                 agg_width: int = 1, prover_capacity: int = 1,
+                 finalize: str = "eager"):
         assert n_shards >= 1
         assert route in ("hash", "least_loaded"), route
         self.l1 = l1
@@ -74,12 +78,25 @@ class ShardedRollup(EventHooks):
         self.route = route
         l1_fns = getattr(l1, "fns", None)
         self.fns: FnRegistry = l1_fns if l1_fns is not None else FnRegistry()
+        # ONE typed event stream and ONE prover pipeline for the whole
+        # fabric: shard events interleave in the L1's log under a single
+        # seq, and job/session/aggregate ids are fabric-global (each
+        # shard still closes its own sessions — the L1 sees K
+        # independent proof aggregations, as before)
+        l1_events = getattr(l1, "events", None)
+        self.events = l1_events if l1_events is not None else EventLog()
+        self.prover = ProverPipeline(
+            gas_table, agg_width=agg_width, capacity=prover_capacity,
+            prove_time=prove_time, finalize=finalize, events=self.events)
         self.shards: List[VectorRollup] = []
-        for _ in range(n_shards):
+        for k in range(n_shards):
             s = VectorRollup(l1, batch_size=batch_size, gas_table=gas_table,
                              prove_time=prove_time, per_tx_time=per_tx_time,
-                             n_lanes=n_lanes, digest_backend=digest_backend)
+                             n_lanes=n_lanes, digest_backend=digest_backend,
+                             prover=self.prover)
             s.fns = self.fns          # one fn namespace across the fabric
+            s._event_shard = k        # shard tag on the shard's events
+            s._suppress_window_event = True   # the fabric's is the window
             self.shards.append(s)
         self.batch_size = batch_size
         self.gas_table = gas_table
@@ -91,6 +108,7 @@ class ShardedRollup(EventHooks):
         self._task_counts = np.zeros(n_shards, np.int64)
         self._submitted = np.zeros(n_shards, np.int64)
         self.fabric_roots: List[Dict[str, Any]] = []
+        self._window = 0
         self._init_events()
 
     # -- events (NodeClient subscription hook) ---------------------------------
@@ -191,6 +209,14 @@ class ShardedRollup(EventHooks):
         if self.state is not None:
             record = self._root_record(nb)
             self.fabric_roots.append(record)
+        self.events.emit(
+            WindowSettled,
+            time=max((s._last_time for s in self.shards), default=0.0),
+            window=self._window, n_batches=nb,
+            state_root=record.get("state_root", ""),
+            fabric_root=record.get("fabric_root", ""),
+            shard_roots=tuple(record.get("shard_roots", ())))
+        self._window += 1
         self._emit("window_settled", record)
         return nb
 
@@ -221,15 +247,21 @@ class ShardedRollup(EventHooks):
         return self.state.root() if self.state is not None else ""
 
     def settle_session(self):
-        """Per-shard zkSync-style settlement: each shard posts ONE
-        amortized verify + execute for its unsettled batches (a shard is
-        its own prover; the L1 sees K independent proof aggregations)."""
+        """Per-shard zkSync-style settlement through the ONE shared
+        prover pipeline: each shard closes its own session (the L1 sees
+        K independent proof aggregations, folded per the fabric's
+        aggregation width)."""
         for s in self.shards:
             s.settle_session()
+
+    def pump(self, now: float) -> int:
+        """Drain the fabric's modeled prover to ``now``."""
+        return self.prover.pump(now)
 
     def flush(self):
         self.seal()
         self.settle_session()
+        self.prover.drain()
 
     # -- merged views ----------------------------------------------------------
     @property

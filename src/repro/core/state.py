@@ -156,6 +156,28 @@ def canonical_bytes(obj: Any) -> bytes:
 # ---------------------------------------------------------------------------
 # chunked xor-mix commitment (NumPy mirror of the Pallas chunk kernel)
 # ---------------------------------------------------------------------------
+_ON_TPU: Optional[bool] = None
+
+
+def tpu_digest_backend() -> bool:
+    """Whether the "auto" digest backend should route through Pallas.
+
+    Probed ONCE per process: ``jax.default_backend()`` costs ~2ms per
+    call, which dominated every ``state_root()``/seal digest on the hot
+    path when probed inline (roots are per-window now — see
+    prover.ProverFace._emit_window).  The device set cannot change
+    mid-process, so caching is safe.
+    """
+    global _ON_TPU
+    if _ON_TPU is None:
+        try:
+            import jax
+            _ON_TPU = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - jax is always in-tree
+            _ON_TPU = False
+    return _ON_TPU
+
+
 def chunk_fold_digests(words: np.ndarray,
                        chunk: int = STATE_CHUNK_WORDS) -> np.ndarray:
     """Per-chunk xor-mix digests: (P,) u32 -> (ceil(P/chunk),) u32.
@@ -182,14 +204,8 @@ def chunked_root(words: np.ndarray, chunk: int = STATE_CHUNK_WORDS,
     if backend == "numpy":
         digests = chunk_fold_digests(words, chunk)
     else:
-        use_pallas = False
-        if backend in ("auto", "pallas"):
-            try:
-                import jax
-                use_pallas = (backend == "pallas"
-                              or jax.default_backend() == "tpu")
-            except Exception:  # pragma: no cover - jax is always in-tree
-                use_pallas = False
+        use_pallas = backend == "pallas" or (backend == "auto"
+                                             and tpu_digest_backend())
         if use_pallas and len(words):
             import jax.numpy as jnp
             from repro.kernels.rollup_digest import rollup_chunk_digests

@@ -204,6 +204,11 @@ class Scheduler:
         self.background = background
         self.runtimes: List[TaskRuntime] = []
         self._bg_pos = 0
+        # typed-event records collected by run() through the node's
+        # client (core/events.py) — the scheduler observes settlement
+        # through the public stream instead of poking ledger internals
+        self.window_records: List[object] = []
+        self.settlement_records: List[object] = []
 
     def add_task(self, task, cohort, **task_kw) -> TaskRuntime:
         """Register a task: ``task`` is an ``repro.api.FLTaskSpec`` (the
@@ -257,8 +262,21 @@ class Scheduler:
         self._bg_pos = j
 
     def run(self) -> Dict[str, object]:
-        """Drive every task to completion; returns {task_id: FLTaskResult}."""
+        """Drive every task to completion; returns {task_id: FLTaskResult}.
+
+        Window/settlement provenance is consumed from the node's typed
+        event stream (``client.events()``): after the run,
+        ``self.window_records`` holds the ``WindowSettled`` commitments
+        (fabric roots on a sharded node) and ``self.settlement_records``
+        the ``AggregateVerified`` postings, in emission order.
+        """
         node = self.node
+        client = node.client()
+        # this run's provenance only: fast-forward past events emitted
+        # before the run (a fresh client's cursor starts at the stack's
+        # genesis), and collect into fresh record lists
+        client.events()
+        self.window_records, self.settlement_records = [], []
         # keep the shared mempool time-sorted: before every protocol
         # emission, background txs stamped earlier than the clock are
         # drained in (both engines pack FIFO and head-of-line-stall on
@@ -288,6 +306,11 @@ class Scheduler:
                     self._seal_rollup()
                 t_end = max(t + self.window, node._clock)
                 self._submit_background(t_end)
+                if node.rollup is not None:
+                    # proof jobs drain on the shared window clock; pump
+                    # BEFORE block production so window-finalized
+                    # settlements land in the blocks that pack this window
+                    node.rollup.pump(t_end)
                 node.chain.run_until(t_end)
                 t = t_end
                 w += 1
@@ -301,4 +324,9 @@ class Scheduler:
             node.chain.run_until(t_end)
         finally:
             node.pre_tx_hook = None
+        for ev in client.events():
+            if ev.kind == "window_settled":
+                self.window_records.append(ev)
+            elif ev.kind == "aggregate_verified":
+                self.settlement_records.append(ev)
         return {rt.task_id: rt.result for rt in self.runtimes}

@@ -155,8 +155,9 @@ class AutoDFL:
 
     def client(self):
         """RPC-style façade over this node's ledger (repro.api.NodeClient):
-        receipts, account views, state root, seal/settle events.  Shares
-        the node's ledger and clock origin."""
+        receipts (proof lifecycle), account views, state root, and the
+        typed event stream (``client.events()``).  Shares the node's
+        ledger and clock origin."""
         from repro.api.client import NodeClient
         return NodeClient(self._target(), self.chain,
                           gas_table=self.spec.chain.gas_table,

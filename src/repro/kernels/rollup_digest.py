@@ -101,3 +101,28 @@ def rollup_chunk_digests(buf: jnp.ndarray, chunk_p: int = 2048,
     # per-chunk lane fold + seed on host-side jnp (n_chunks x 128, tiny)
     return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
         out, jnp.uint32(0), jnp.bitwise_xor, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def rollup_aggregate_digests(digests: jnp.ndarray,
+                             width: int) -> jnp.ndarray:
+    """Recursive proof aggregation: (n,) u32 digests -> (ceil(n/width),)
+    u32 aggregate digests.
+
+    The prover pipeline's aggregation stage (core/prover.py) applies the
+    SAME xor-mix fold the batch digests were built with, one level up:
+    batch tx words -> batch digest -> session proof -> aggregate proof.
+    The digest vector is tiny (one word per proof), so this is a plain
+    jitted VPU fold rather than a pallas_call; ``core.state.
+    chunk_fold_digests(digests, chunk=width)`` is the bit-exact NumPy
+    mirror (pinned by tests/test_prover.py).  Zero padding folds away
+    (zero words mix to zero), matching the chunk kernel's padded tail.
+    """
+    d = jnp.asarray(digests, jnp.uint32)
+    pad = (-d.shape[0]) % width
+    if pad:
+        d = jnp.pad(d, (0, pad))
+    d2 = d.reshape(-1, width)
+    mixed = jnp.bitwise_xor(d2, d2 >> 16) * jnp.uint32(0x85EBCA6B)
+    return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
+        mixed, jnp.uint32(0), jnp.bitwise_xor, (1,))

@@ -104,7 +104,7 @@ def test_receipt_gas_equals_ledger_accounted_gas(spec):
     """Satellite pin: receipt gas == the ledger's accounted gas."""
     client, receipts = _drive(spec)
     target = client.target
-    assert all(r.status == "settled" for r in receipts)
+    assert all(r.status == "finalized" for r in receipts)
     # per-batch breakdown equals the ledger's own gas_log row
     log = target.gas_log
     for r in receipts:
@@ -164,7 +164,7 @@ def test_submit_arrays_receipts_cover_a_workload():
     client.run_until(10.0)
     for r in receipts:
         client.refresh(r)
-    assert all(r.status == "settled" for r in receipts)
+    assert all(r.status == "finalized" for r in receipts)
     # conservation across shards: every tx in exactly one sealed batch
     total = sum(row["total"] for row in client.target.gas_log)
     assert np.isclose(sum(r.gas_breakdown["amortized"] for r in receipts),
@@ -173,12 +173,39 @@ def test_submit_arrays_receipts_cover_a_workload():
 
 
 # -- events --------------------------------------------------------------------
-def test_event_subscriptions_fire():
+def test_typed_event_stream_covers_the_proof_lifecycle():
+    client = NodeClient.from_spec(NodeSpec(shards=ShardSpec(count=2)))
+    for i in range(30):
+        client.submit("submitLocalModel", f"t{i}")
+    client.flush()
+    client.run_until(5.0)
+    evs = client.events()
+    kinds = [e.kind for e in evs]
+    for kind in ("batch_sealed", "proof_generated", "aggregate_verified",
+                 "window_settled", "block_packed"):
+        assert kind in kinds, kinds
+    sealed = [e for e in evs if e.kind == "batch_sealed"]
+    assert sum(e.n_txs for e in sealed) == 30
+    assert all(e.shard in (0, 1) for e in sealed)
+    windows = [e for e in evs if e.kind == "window_settled"]
+    assert windows[-1].fabric_root and len(windows[-1].shard_roots) == 2
+    # the stream is a drain: a second call yields only what's new
+    assert client.events() == []
+    client.flush()
+    assert [e.kind for e in client.events()] == ["window_settled"]
+    # events are a total order under one monotonic seq
+    assert [e.seq for e in evs] == sorted(e.seq for e in evs)
+
+
+def test_legacy_subscribe_shim_still_fires_with_a_warning():
     client = NodeClient.from_spec(NodeSpec(shards=ShardSpec(count=2)))
     sealed, settled, windows = [], [], []
-    client.subscribe("batch_sealed", sealed.append)
-    client.subscribe("session_settled", settled.append)
-    client.subscribe("window_settled", windows.append)
+    with pytest.warns(DeprecationWarning, match="events"):
+        client.subscribe("batch_sealed", sealed.append)
+    with pytest.warns(DeprecationWarning):
+        client.subscribe("session_settled", settled.append)
+    with pytest.warns(DeprecationWarning):
+        client.subscribe("window_settled", windows.append)
     for i in range(30):
         client.submit("submitLocalModel", f"t{i}")
     client.flush()
@@ -186,26 +213,52 @@ def test_event_subscriptions_fire():
     assert all("shard" in e for e in sealed + settled)
     assert sum(e["n_txs"] for e in sealed) == 30
     assert "fabric_root" in windows[-1]
-    # chain-only nodes expose no batch/window events
+
+
+def test_chain_only_nodes_emit_block_events_and_report_capabilities():
+    """Satellite pin: a chain-only node is a smaller event surface, not
+    an error — block_packed flows through events(), capabilities() says
+    what the backend supports, and only unsupported callback hooks
+    raise."""
     bare = NodeClient.from_spec(NodeSpec(rollup=None))
-    with pytest.raises(ValueError):
-        bare.subscribe("batch_sealed", lambda e: None)
+    assert bare.capabilities() == frozenset({"block_packed"})
+    full = NodeClient.from_spec(NodeSpec())
+    assert "aggregate_verified" in full.capabilities()
+    assert "block_packed" in full.capabilities()
+    for i in range(10):
+        bare.submit("publishTask", f"p{i}")
+    bare.run_until(3.0)
+    blocks = bare.events(kinds=("block_packed",))
+    assert blocks and sum(e.n_txs for e in blocks) == 10
+    assert all(e.block_hash for e in blocks)
+    # the legacy shim works for the chain's own hook...
+    seen = []
+    with pytest.warns(DeprecationWarning):
+        bare.subscribe("block_packed", seen.append)
+    bare.run_until(4.0)
+    assert seen
+    # ...and still rejects rollup-only hooks (with the capabilities)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="capabilities"):
+            bare.subscribe("batch_sealed", lambda e: None)
 
 
 def test_object_rollup_events_and_provenance():
     client = NodeClient.from_spec(
         NodeSpec(chain=ChainSpec(backend="object")))
-    sealed = []
-    client.subscribe("batch_sealed", sealed.append)
     receipts = [client.submit("calculateObjectiveRep", "t0")
                 for _ in range(25)]
     client.flush()
     client.run_until(5.0)
     for r in receipts:
         client.refresh(r)
-    assert [e["n_txs"] for e in sealed] == [20, 5]
+    sealed = client.events(kinds=("batch_sealed",))
+    assert [e.n_txs for e in sealed] == [20, 5]
     assert [r.batch for r in receipts] == [0] * 20 + [1] * 5
     assert all(r.l1_ref for r in receipts)      # commit tx ids
+    # proof lifecycle provenance rides on the receipt
+    assert all(r.proof_ref is not None and r.aggregate_ref is not None
+               for r in receipts)
 
 
 # -- protocol-node equivalence: spec path == legacy kwarg path -----------------

@@ -257,7 +257,7 @@ def test_settlement_survives_gas_log_truncation():
     del ru.gas_log[-1]
     ru.flush()
     assert [dict(r) for r in ru.gas_log] == settled   # no misattribution
-    assert ru._unsettled == 0
+    assert ru.prover.n_unsettled(ru) == 0
 
 
 def test_reentrant_handler_submit_defers_seal():
