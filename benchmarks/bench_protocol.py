@@ -21,11 +21,29 @@ Methodology (recorded so BENCH_protocol.json entries stay comparable):
     (Table-I per-call gas x call counts) vs the rollup's
     commit+verify+execute total from its gas_log.
 
+  * Window loop: the fused plan-then-execute driver (core/fused.py +
+    kernels/block_pack + kernels/batch_seal) vs the Python-stepped window
+    loop on a pure-ledger protocol workload (pre-generated tx traffic, no
+    FL compute) — isolates the scheduling/ledger hot path the fused loop
+    compiles.  Both paths are asserted BIT-IDENTICAL (events + gas) before
+    timing; best-of-3 walls after a per-shape warmup.
+
 Acceptance (asserted here, full mode): the scheduler with 16 concurrent
 tasks x 64 trainers sustains >= 10x the protocol throughput of sequential
 ``run_task`` calls over the same work.  Quick mode (CI smoke) asserts the
 8-task x 32-trainer point against a reduced >= 3x floor (timer noise on
 shared runners; the measured ratio is recorded either way).
+
+Fused window-loop acceptance: at the largest task count the fused loop
+must be >= 1.2x the stepped wall (quick: >= 1.0x; measured ~1.4-2.1x on
+an unloaded machine) and its per-task TPS at 32 tasks must stay >= 0.3x
+the 4-task value (measured ~0.45x vs the stepped path's ~0.23x — the
+fused loop halves the per-task collapse; the residual slope is the
+per-batch prover/event protocol work both paths must emit identically).
+PR-5 baselines for cross-PR comparison are recorded in the JSON under
+``baseline_pr5`` (same machine, seed revision 544a4e2): FL scheduler
+32 tasks x 64 trainers = 229 per-task TPS (this revision: ~330), stepped
+pure-ledger window loop at 32 tasks = 13.8k per-task TPS.
 """
 from __future__ import annotations
 
@@ -155,13 +173,111 @@ def _run_scheduler(world, n_tasks: int, n_trainers: int,
             "gas_reduction": round(l1_equiv / l2, 1)}
 
 
+# -- fused window loop: stepped vs plan-then-execute on the raw ledger ---------
+
+WINDOW_TXS_PER_TASK, WINDOW_COUNT, WINDOW_SEED = 6, 48, 0
+
+
+def _window_traffic(n_tasks: int, fns) -> list:
+    """Protocol-shaped pre-generated traffic: per window, one small SoA
+    batch per task (the ``_tx_batch`` shape), clock-stamped like the
+    scheduler stamps them."""
+    from repro.core.engine import TxArrays
+    for f in ("publishTask", "submitLocalModel", "calculateObjectiveRep",
+              "calculateSubjectiveRep"):
+        fns.id(f)
+    rng = np.random.default_rng(WINDOW_SEED)
+    out, t = [], 0.0
+    for w in range(WINDOW_COUNT):
+        row = []
+        for _m in range(n_tasks):
+            k = WINDOW_TXS_PER_TASK
+            times = t + 0.01 * np.arange(1, k + 1)
+            t = float(times[-1])
+            row.append(TxArrays(times, np.full(k, 30000, np.int64),
+                                rng.integers(0, 4, k).astype(np.int32),
+                                rng.integers(0, 64, k).astype(np.int32),
+                                fns))
+        out.append(row)
+        t = max(t, (w + 1) * 1.0)
+    return out
+
+
+def _window_loop_once(n_tasks: int, fused: bool):
+    """One window-loop run (seal+pump+pack per window, flush+settle at
+    the end); returns (chain, rollup, wall_seconds)."""
+    from repro.core.engine import VectorChain, VectorRollup
+    from repro.core.fused import FusedWindowLoop
+    chain = VectorChain()
+    rollup = VectorRollup(chain, n_lanes=4, agg_width=4, prover_capacity=2)
+    traffic = _window_traffic(n_tasks, rollup.fns)
+    t0 = time.perf_counter()
+    face = FusedWindowLoop(chain, rollup) if fused else rollup
+    t = 0.0
+    for row in traffic:
+        for b in row:
+            face.submit(rollup, b) if fused else rollup.submit_arrays(b)
+        face.seal()
+        t_end = max(t + 1.0, float(row[-1].submit_time[-1]))
+        face.pump(t_end)
+        (face if fused else chain).run_until(t_end)
+        t = t_end
+    face.flush()
+    (face if fused else chain).run_until(t + 5.0)
+    if fused:
+        face.execute()
+    return chain, rollup, time.perf_counter() - t0
+
+
+def _run_window_loop(quick: bool) -> Dict:
+    task_sweep = [4, 8] if quick else [4, 8, 16, 32]
+    grid = {}
+    for m in task_sweep:
+        _window_loop_once(m, fused=True)         # warm this shape bucket
+        best_s = best_f = float("inf")
+        for _rep in range(3):
+            ca, ra, ds = _window_loop_once(m, fused=False)
+            cb, rb, df = _window_loop_once(m, fused=True)
+            best_s, best_f = min(best_s, ds), min(best_f, df)
+        # equivalence gate before any timing is trusted
+        assert ca.events._events == cb.events._events
+        assert ca.total_gas == cb.total_gas and ca.blocks == cb.blocks
+        assert ra.gas_log == rb.gas_log
+        assert ra.update_digest == rb.update_digest
+        n_txs = m * WINDOW_COUNT * WINDOW_TXS_PER_TASK
+        grid[f"tasks={m}"] = {
+            "n_txs": n_txs, "stepped_wall_s": round(best_s, 4),
+            "fused_wall_s": round(best_f, 4),
+            "fused_speedup": round(best_s / best_f, 2),
+            "fused_tps": round(n_txs / best_f, 0),
+            "fused_per_task_tps": round(n_txs / best_f / m, 0),
+            "stepped_per_task_tps": round(n_txs / best_s / m, 0)}
+    top = grid[f"tasks={task_sweep[-1]}"]
+    ratio_floor = 1.0 if quick else 1.2
+    assert top["fused_speedup"] >= ratio_floor, (
+        f"fused window loop at {task_sweep[-1]} tasks must be >= "
+        f"{ratio_floor}x the stepped wall, got {top['fused_speedup']}x")
+    flat = top["fused_per_task_tps"] / grid[
+        f"tasks={task_sweep[0]}"]["fused_per_task_tps"]
+    flat_floor = 0.2 if quick else 0.3
+    assert flat >= flat_floor, (
+        f"fused per-task TPS at {task_sweep[-1]} tasks fell to {flat:.2f}x "
+        f"the {task_sweep[0]}-task value (floor {flat_floor})")
+    return {"windows": WINDOW_COUNT, "txs_per_task": WINDOW_TXS_PER_TASK,
+            "seed": WINDOW_SEED, "task_sweep": task_sweep, "grid": grid,
+            "fused_speedup": top["fused_speedup"],
+            "fused_speedup_floor": ratio_floor,
+            "per_task_flatness": round(flat, 3),
+            "per_task_flatness_floor": flat_floor}
+
+
 def run(quick: bool = False) -> Dict:
     world = _protocol_world()
     model, opt = world[0], world[1]
     kernels = CohortKernels(model, opt, world[4])
     assert_tasks, assert_trainers = (8, 32) if quick else (16, 64)
     sweep = ([(1, 16), (4, 32), (8, 32)] if quick else
-             [(1, 32), (4, 32), (8, 32), (8, 64), (16, 64)])
+             [(1, 32), (4, 32), (8, 32), (8, 64), (16, 64), (32, 64)])
     grid = {}
     for n_tasks, n_trainers in sweep:
         m = _run_scheduler(world, n_tasks, n_trainers, kernels)
@@ -174,12 +290,21 @@ def run(quick: bool = False) -> Dict:
     assert speedup >= floor, (
         f"scheduler with {assert_tasks} concurrent tasks must be >= "
         f"{floor}x sequential run_task throughput, got {speedup:.1f}x")
+    window_loop = _run_window_loop(quick)
     return {"quick": quick, "rounds": ROUNDS, "local_steps": LOCAL_STEPS,
-            "batch": BATCH,
+            "batch": BATCH, "data_seeds": {"train": 1, "val": 2},
             "assert_point": {"n_tasks": assert_tasks,
                              "n_trainers": assert_trainers},
             "sequential": seq, "scheduler_grid": grid,
-            "speedup": round(speedup, 1), "speedup_floor": floor}
+            "speedup": round(speedup, 1), "speedup_floor": floor,
+            "window_loop": window_loop,
+            "baseline_pr5": {
+                "revision": "544a4e2",
+                "fl_32x64_per_task_tps": 229.0,
+                "fl_4x64_per_task_tps": 1817.0,
+                "stepped_ledger_32task_per_task_tps": 13836.0,
+                "note": "same-machine measurements at the PR-5 seed "
+                        "revision; see README Performance"}}
 
 
 if __name__ == "__main__":
@@ -191,6 +316,6 @@ if __name__ == "__main__":
         os.path.join(os.path.dirname(os.path.abspath(__file__)),
                      "BENCH_protocol.json"))
     with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print(json.dumps(out, indent=1))
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(json.dumps(out, indent=1, sort_keys=True))
     print(f"# wrote {path}", file=sys.stderr)

@@ -1,0 +1,168 @@
+"""Bench regression gate: fresh BENCH_summary.json vs the committed one.
+
+CI (the ``bench-regression`` job) copies the committed summary aside,
+re-runs the reduced benchmarks, rebuilds ``BENCH_summary.json`` with
+``run.py --all``, and calls this script:
+
+    python benchmarks/check_regression.py \
+        --baseline /tmp/baseline_summary.json \
+        --fresh benchmarks/BENCH_summary.json \
+        --diff-out bench_regression_diff.json [--tolerance 0.25]
+
+Two kinds of checks, both configurable:
+
+  * **absolute floors** (``FLOORS``): headline metrics that must clear a
+    hard minimum in ANY mode — these encode the acceptance criteria the
+    benchmarks themselves assert, so the gate still bites when the
+    baseline file is missing or was produced in a different mode;
+  * **relative tolerance** (``--tolerance``, default 0.25): when baseline
+    and fresh entries were produced in the SAME mode (quick vs full), a
+    higher-is-better metric may not drop more than ``tolerance * 100``%
+    below the committed value.  Per-metric overrides live in ``TOLERANCE``
+    (timing-derived metrics on shared CI runners get a looser band than
+    deterministic ones like gas reduction).
+
+Every compared metric lands in the ``--diff-out`` JSON artifact with its
+before/after values and verdict, regressions first; exit status is the
+number of regressions (0 == gate passes).
+
+Dry run (verified): degrading any committed headline, e.g.
+
+    jq '.BENCH_protocol.headline.speedup = 99' \
+        benchmarks/BENCH_summary.json > /tmp/degraded.json
+    python benchmarks/check_regression.py --baseline /tmp/degraded.json \
+        --fresh benchmarks/BENCH_summary.json --diff-out /tmp/d.json
+
+exits 1 and reports ``BENCH_protocol.speedup`` as the regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+# metric path -> hard floor in any mode (mirrors the in-bench asserts at
+# their quick/reduced values, so a quick CI run can still be gated)
+FLOORS: Dict[str, float] = {
+    "BENCH_protocol.speedup": 3.0,
+    "BENCH_protocol.window_loop_speedup": 1.0,
+    "BENCH_engine.speedup": 1.0,
+    "BENCH_shards.scaling": 1.5,
+    "BENCH_prover.verify_gas_reduction": 4.0,
+}
+
+# per-metric relative-drop overrides (fraction of the baseline value);
+# anything not listed uses --tolerance
+TOLERANCE: Dict[str, float] = {
+    # pure gas accounting: deterministic, no timer in the loop
+    "BENCH_prover.verify_gas_reduction": 0.01,
+    # wall-clock ratios on shared runners: looser
+    "BENCH_protocol.speedup": 0.4,
+    "BENCH_protocol.window_loop_speedup": 0.3,
+    "BENCH_engine.speedup": 0.4,
+    "BENCH_shards.scaling": 0.4,
+}
+
+
+def _metrics(summary: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Flatten a BENCH_summary dict into {path: {value, quick}} for every
+    numeric headline metric."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for stem, entry in summary.items():
+        if not isinstance(entry, dict):
+            continue
+        headline = entry.get("headline")
+        if not isinstance(headline, dict):
+            continue
+        quick = bool(entry.get("quick", False))
+        for key, val in headline.items():
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                continue
+            out[f"{stem}.{key}"] = {"value": float(val), "quick": quick}
+    return out
+
+
+def check(baseline: Optional[Dict[str, Any]], fresh: Dict[str, Any],
+          tolerance: float) -> List[Dict[str, Any]]:
+    """Compare summaries; returns one row per checked metric."""
+    rows: List[Dict[str, Any]] = []
+    fresh_m = _metrics(fresh)
+    base_m = _metrics(baseline) if baseline else {}
+    for path, fm in sorted(fresh_m.items()):
+        row: Dict[str, Any] = {"metric": path, "fresh": fm["value"],
+                               "checks": []}
+        ok = True
+        floor = FLOORS.get(path)
+        if floor is not None:
+            passed = fm["value"] >= floor
+            row["checks"].append({"kind": "floor", "floor": floor,
+                                  "passed": passed})
+            ok &= passed
+        bm = base_m.get(path)
+        if bm is not None:
+            row["baseline"] = bm["value"]
+            if bm["quick"] == fm["quick"] and bm["value"] > 0:
+                tol = TOLERANCE.get(path, tolerance)
+                lo = bm["value"] * (1.0 - tol)
+                passed = fm["value"] >= lo
+                row["checks"].append({
+                    "kind": "relative", "tolerance": tol,
+                    "min_allowed": round(lo, 4), "passed": passed})
+                ok &= passed
+            else:
+                row["checks"].append({"kind": "relative",
+                                      "skipped": "mode mismatch"})
+        row["verdict"] = "ok" if ok else "REGRESSION"
+        rows.append(row)
+    # baseline metrics that vanished from the fresh run are regressions
+    # too (a silently dropped benchmark must not pass the gate)
+    for path in sorted(set(base_m) - set(fresh_m)):
+        rows.append({"metric": path, "baseline": base_m[path]["value"],
+                     "fresh": None, "checks": [{"kind": "presence",
+                                                "passed": False}],
+                     "verdict": "REGRESSION"})
+    rows.sort(key=lambda r: (r["verdict"] != "REGRESSION", r["metric"]))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_summary.json (pre-run copy)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly rebuilt BENCH_summary.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="default max relative drop (fraction)")
+    ap.add_argument("--diff-out", default=None,
+                    help="write the before/after diff artifact here")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        print(f"# no usable baseline ({err}); floors only", file=sys.stderr)
+        baseline = None
+
+    rows = check(baseline, fresh, args.tolerance)
+    regressions = [r for r in rows if r["verdict"] == "REGRESSION"]
+    diff = {"tolerance_default": args.tolerance,
+            "n_regressions": len(regressions), "rows": rows}
+    if args.diff_out:
+        with open(args.diff_out, "w") as f:
+            json.dump(diff, f, indent=1, sort_keys=True)
+    for r in rows:
+        base = r.get("baseline", "-")
+        print(f"{r['verdict']:>10}  {r['metric']}: "
+              f"baseline={base} fresh={r['fresh']}")
+    if regressions:
+        print(f"# {len(regressions)} regression(s); see "
+              f"{args.diff_out or 'rows above'}", file=sys.stderr)
+    return len(regressions)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

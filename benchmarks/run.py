@@ -41,6 +41,8 @@ _HEADLINES = {
         "speedup": d["out"]["speedup"], "n_txs": d["out"]["n_txs"]},
     "BENCH_protocol": lambda d: {
         "speedup": d["speedup"],
+        "window_loop_speedup": d["window_loop"]["fused_speedup"],
+        "window_loop_flatness": d["window_loop"]["per_task_flatness"],
         "assert_point": d["assert_point"]},
     "BENCH_shards": lambda d: {
         "scaling": d["scaling"],
@@ -77,6 +79,12 @@ def aggregate_all(bench_dir: str) -> dict:
                 entry["headline"] = extractor(data)
             except (KeyError, TypeError) as err:
                 entry["headline_error"] = repr(err)
+        # record any seed config the bench declares, so two summaries are
+        # comparable only when they measured the same draw
+        seeds = {k: v for k, v in data.items()
+                 if isinstance(k, str) and "seed" in k.lower()}
+        if seeds:
+            entry["seeds"] = seeds
         summary[stem] = entry
     return summary
 
@@ -95,9 +103,11 @@ def run_all(bench_dir: str) -> None:
     summary["_presets"] = describe_presets()
     print(f"# node presets: {','.join(sorted(summary['_presets']))}",
           file=sys.stderr)
+    # deterministic artifact: stable key order, no timestamps — two runs
+    # over identical BENCH_*.json inputs produce byte-identical output
     path = os.path.join(bench_dir, "BENCH_summary.json")
     with open(path, "w") as f:
-        json.dump(summary, f, indent=1, default=str)
+        json.dump(summary, f, indent=1, default=str, sort_keys=True)
     print(f"# wrote {path}", file=sys.stderr)
 
 
@@ -201,7 +211,7 @@ def main() -> None:
                      "BENCH.json"))
     with open(path, "w") as f:
         json.dump({"quick": quick, "results": results}, f, indent=1,
-                  default=str)
+                  default=str, sort_keys=True)
     print(f"# wrote {path}", file=sys.stderr)
 
 

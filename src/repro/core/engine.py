@@ -67,25 +67,22 @@ def xor_fold_digest(words: np.ndarray) -> int:
 def xor_fold_digest_segments(words: np.ndarray,
                              starts: np.ndarray) -> np.ndarray:
     """Segmented fold: one digest per ``[starts[i], starts[i+1])`` word
-    range (u32 array).  Same construction as ``xor_fold_digest`` applied
-    per segment — the multi-batch form VectorRollup.seal uses."""
-    return DIGEST_SEED ^ np.bitwise_xor.reduceat(_mix(words), starts)
+    range (u32 array) — the multi-batch form VectorRollup.seal uses.
+    Routed through the kernel factory (op ``"batch_seal"``): the NumPy
+    mirror on CPU, the Pallas segment kernel on TPU, overridable via
+    ``REPRO_KERNEL_IMPL`` (see kernels/factory.py)."""
+    from repro.kernels.factory import get_kernel
+    return get_kernel("batch_seal")(words, starts)
 
 
 def pallas_or_numpy_digest(words: np.ndarray, backend: str = "auto") -> int:
-    """Route the merged word buffer through the Pallas kernel (TPU) or the
-    NumPy mirror (CPU).  backend: "auto" | "pallas" | "numpy".  The TPU
-    probe is cached process-wide (state.tpu_digest_backend) — probing
-    jax per seal dominated the digest itself on CPU."""
-    if backend == "numpy":
-        return xor_fold_digest(words)
-    if backend == "auto":
-        from repro.core.state import tpu_digest_backend
-        if not tpu_digest_backend():
-            return xor_fold_digest(words)
-    import jax.numpy as jnp
-    from repro.kernels.ops import rollup_digest
-    return int(rollup_digest(jnp.asarray(words, jnp.uint32)))
+    """Route the merged word buffer through the kernel factory (op
+    ``"rollup_digest"``): Pallas on TPU, the NumPy mirror on CPU.
+    backend: "auto" | "pallas" | "numpy" (an explicit choice maps to the
+    factory impl of the same name)."""
+    from repro.kernels.factory import get_kernel
+    impl = None if backend == "auto" else backend
+    return int(get_kernel("rollup_digest", impl)(words))
 
 
 class FnRegistry(Registry):
@@ -180,6 +177,8 @@ class VectorChain(EventHooks):
     # this flag, not on submit_arrays presence — the object faces expose a
     # lowering submit_arrays adapter too, but drop nothing when fed Txs)
     soa_native = True
+    # the SoA L1 can run under the core/fused.py plan-then-execute loop
+    fused_capable = True
 
     def __init__(self, n_validators: int = 4, block_time: float = 1.0,
                  block_gas_limit: int = 9_000_000,
@@ -431,6 +430,7 @@ class VectorRollup(ProverFace, EventHooks):
     """
 
     soa_native = True
+    fused_capable = True
 
     def __init__(self, l1, batch_size: int = ROLLUP_BATCH,
                  gas_table: GasTable = DEFAULT_GAS,

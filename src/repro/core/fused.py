@@ -1,0 +1,476 @@
+"""Fused compiled window loop over the SoA ledger hot path.
+
+The Python-stepped scheduler drives every window through four separate
+round-trips — pump the prover, seal lane batches, settle, and pack L1
+blocks (``fl/scheduler.Scheduler.run``).  At small per-window tx counts
+the vector engine's per-call Python overhead (not the array math)
+dominates, so per-task throughput collapses as task count grows.
+
+``FusedWindowLoop`` is a plan-then-execute driver for the same loop:
+
+  * during the window loop, ledger calls append cheap **plan entries**
+    (chain staging, seal/pump/settle points, block-production edges)
+    instead of executing eagerly;
+  * ``execute()`` then replays the plan once:
+
+      1. every seal point's lane/batch structure, commit gas, timestamps
+         and digests are computed in ONE vectorized pass over all
+         windows (the per-batch xor-roots and per-window update digests
+         both route through the ``batch_seal`` kernel — one call each
+         for the whole run);
+      2. the plan is walked in order, applying the precomputed seal
+         slices, pumping the prover and staging L1 traffic exactly as
+         the stepped path would — so event order, arrival indices, gas
+         rows and state-handler application order are bit-identical;
+      3. every deferred ``run_until`` edge becomes rows of one block
+         grid, packed by a single ``block_pack`` kernel call (a jitted
+         ``lax.scan`` over blocks with donated SoA buffers — N windows
+         of blocks as one XLA program instead of N Python round-trips),
+         and the resulting ``BlockPacked`` events are spliced back into
+         the typed stream at the positions the stepped path would have
+         emitted them.
+
+Equivalence contract (pinned by tests/test_fused.py): a fused run and a
+stepped run of the same schedule produce identical typed event streams,
+state roots, gas logs, blocks, confirm times and results.  The only
+visible difference is legacy ``EventHooks`` callback TIMING: string-key
+subscribers see ``block_packed`` callbacks at ``execute()`` instead of
+mid-run (relative order among block_packed callbacks is preserved).
+
+Scope: ``VectorChain`` alone or ``VectorChain`` + ``VectorRollup``.
+The sharded fabric and the object engines keep the stepped path
+(``Scheduler(fused="auto")`` falls back automatically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import (BlockStats, TxArrays, VectorChain,
+                               VectorRollup)
+from repro.core.events import BatchSealed, BlockPacked
+
+
+def supports_fused(chain, rollup) -> bool:
+    """True when the (chain, rollup) pair can run the fused loop: a SoA
+    L1 and (optionally) an unsharded SoA rollup face.  Backends declare
+    themselves via a ``fused_capable`` class marker (VectorChain and
+    VectorRollup set it True; the object engines lack it; ShardedRollup
+    sets it False — its per-shard seals with cross-shard routing state
+    cannot replay as one plan)."""
+    if not getattr(chain, "fused_capable", False):
+        return False
+    return rollup is None or getattr(rollup, "fused_capable", False)
+
+
+@dataclasses.dataclass
+class _SealPrep:
+    """One seal point, fully precomputed (None group -> empty seal).
+
+    Everything the stepped ``seal()`` derives per call — batch structure,
+    commit gas, timestamps, digests, gas rows, even the commit TxArrays —
+    is built in the one bulk pass; applying a seal is pure bookkeeping."""
+
+    txs: TxArrays                # the group's txs, arrival order
+    n_txs: np.ndarray            # per-batch tx counts
+    now: np.ndarray              # per-batch max submit_time
+    roots: np.ndarray            # per-batch tx xor-roots (u32)
+    update_digest: int           # whole-group merged-buffer digest
+    arrival_batch: np.ndarray    # per-tx GLOBAL batch id (arrival order)
+    first: int                   # global id of the group's first batch
+    rows: List[Dict[str, Any]]   # prebuilt gas_log rows
+    commit_batch: TxArrays       # time-sorted L1 commit txs
+    inv_post: np.ndarray         # batch j -> its commit's index in post
+
+
+class FusedWindowLoop:
+    """Plan-then-execute driver for one stepped scheduler run.
+
+    Record phase (the window loop): ``submit`` / ``seal`` / ``pump`` /
+    ``run_until`` / ``flush``.  Rollup-bound txs stage into the real
+    pending queue immediately (their order only matters relative to seal
+    points, which the plan tracks by watermark); chain-bound txs are
+    journaled so their arrival indices interleave correctly with the
+    seal commits and settlement txs replayed later.  ``execute()`` runs
+    the whole plan; afterwards the ledger state is indistinguishable
+    from a stepped run.
+    """
+
+    def __init__(self, chain: VectorChain,
+                 rollup: Optional[VectorRollup] = None):
+        assert supports_fused(chain, rollup), \
+            "fused loop needs a VectorChain (+ optional VectorRollup)"
+        self.chain = chain
+        self.rollup = rollup
+        self._plan: List[Tuple] = []
+        # journaled rollup staging; adopt anything already pending so the
+        # first planned seal covers it, like a stepped seal would
+        self._r_batches: List[TxArrays] = []
+        if rollup is not None and rollup._pending:
+            self._r_batches.extend(rollup._pending)
+            rollup._pending, rollup._pending_n = [], 0
+        self._executed = False
+
+    # -- record phase ----------------------------------------------------------
+    def submit(self, target, batch: TxArrays):
+        """Route one SoA batch: journaled, not staged — rollup txs only
+        order relative to seal points (watermarked), chain txs replay
+        in-order so arrival indices interleave with commits exactly."""
+        if target is self.rollup and self.rollup is not None:
+            rollup = self.rollup
+            if batch.fns is not rollup.fns:
+                remap = np.array([rollup.fns.id(n)
+                                  for n in batch.fns.names], np.int32)
+                batch = TxArrays(batch.submit_time, batch.gas,
+                                 remap[batch.fn_id] if len(batch) else
+                                 batch.fn_id, batch.sender_id, rollup.fns)
+            # assign the seq range now (receipts hold [lo, hi) before
+            # execute, same as a live submit)
+            lo = rollup._next_seq
+            rollup._next_seq += len(batch)
+            self._r_batches.append(batch)
+            return lo, lo + len(batch)
+        assert target is self.chain, "unknown fused submit target"
+        if batch.fns is not self.chain.fns:
+            # same remap submit_arrays would do — at RECORD time, so fn
+            # names register in the stepped path's order
+            remap = np.array([self.chain.fns.id(n)
+                              for n in batch.fns.names], np.int32)
+            batch = TxArrays(batch.submit_time, batch.gas,
+                             remap[batch.fn_id] if len(batch) else
+                             batch.fn_id, batch.sender_id, self.chain.fns)
+        self._plan.append(("tx", batch))
+        return None
+
+    def covers(self, target) -> bool:
+        return target is self.chain or (self.rollup is not None
+                                        and target is self.rollup)
+
+    def seal(self):
+        """Plan a seal point at the current rollup staging watermark."""
+        assert self.rollup is not None
+        # the stepped path registers the commit fn at its first seal —
+        # keep the registry's id order identical
+        self.rollup.fns.id("rollup_commit")
+        self._plan.append(("seal", len(self._r_batches)))
+
+    def pump(self, t_end: float):
+        self._plan.append(("pump", float(t_end)))
+
+    def run_until(self, t_end: float):
+        self._plan.append(("blocks", float(t_end)))
+
+    def flush(self):
+        """Plan the stepped ``rollup.flush()``: tail seal + session close
+        + forced drain."""
+        self.seal()
+        self._plan.append(("settle",))
+
+    def sync_state(self, state, ids: np.ndarray, reputation: np.ndarray,
+                   balances, stake):
+        """Plan a cross-window state scatter (the node's fabric-state
+        sync) so it lands between the seal points exactly where the
+        stepped path wrote it — per-window state roots depend on it."""
+        self._plan.append(("sync", state, np.asarray(ids, np.int64),
+                           np.asarray(reputation, np.float32),
+                           np.asarray(balances, np.float64),
+                           np.asarray(stake, np.float64)))
+
+    # -- execute: one pass over the plan ---------------------------------------
+    def execute(self) -> None:
+        assert not self._executed, "fused plan already executed"
+        self._executed = True
+        chain, rollup = self.chain, self.rollup
+        preps = self._prepare_seals()
+        chain_buf: List[TxArrays] = []
+
+        def flush_chain():
+            if not chain_buf:
+                return
+            if len(chain_buf) == 1:
+                chain.submit_arrays(chain_buf[0])
+            else:
+                chain.submit_arrays(TxArrays(
+                    np.concatenate([b.submit_time for b in chain_buf]),
+                    np.concatenate([b.gas for b in chain_buf]),
+                    np.concatenate([b.fn_id for b in chain_buf]),
+                    np.concatenate([b.sender_id for b in chain_buf]),
+                    chain.fns))
+            chain_buf.clear()
+
+        times: List[float] = []
+        n_vis: List[int] = []
+        # (event position, first deferred block, #blocks) per blocks edge
+        markers: List[Tuple[int, int, int]] = []
+        cursor = chain.blocks[-1].time
+        seal_i = 0
+        for entry in self._plan:
+            op = entry[0]
+            if op == "tx":
+                chain_buf.append(entry[1])
+            elif op == "seal":
+                flush_chain()
+                self._apply_seal(preps[seal_i])
+                seal_i += 1
+            elif op == "pump":
+                flush_chain()
+                rollup.pump(entry[1])
+            elif op == "settle":
+                flush_chain()
+                rollup.settle_session()
+                rollup.prover.drain(rollup)
+            elif op == "sync":
+                _, state, ids, rep, bal, stake = entry
+                state.ensure_ids(ids)
+                state.reputation[ids] = rep
+                state.balances[ids] = bal
+                state.stake[ids] = stake
+            elif op == "blocks":
+                flush_chain()
+                t_end = entry[1]
+                lo = len(times)
+                while cursor < t_end:
+                    cursor += chain.block_time
+                    times.append(cursor)
+                    n_vis.append(chain.n_submitted)
+                if len(times) > lo:
+                    markers.append((chain.events.next_cursor, lo,
+                                    len(times) - lo))
+            else:                                       # pragma: no cover
+                raise AssertionError(f"unknown plan op {op!r}")
+        flush_chain()
+        self._pack_blocks(np.asarray(times, np.float64),
+                          np.asarray(n_vis, np.int64), markers)
+
+    # -- seal precompute + per-point application -------------------------------
+    def _collect_groups(self) -> List[List[TxArrays]]:
+        """Split the journaled rollup staging at the planned watermarks;
+        batches past the last watermark return to the real pending queue
+        (they are what a stepped run would leave unsealed)."""
+        groups, prev = [], 0
+        for entry in self._plan:
+            if entry[0] == "seal":
+                groups.append(self._r_batches[prev:entry[1]])
+                prev = entry[1]
+        tail = self._r_batches[prev:]
+        if tail:
+            self.rollup._pending.extend(tail)
+            self.rollup._pending_n += sum(len(b) for b in tail)
+        return groups
+
+    def _prepare_seals(self) -> List[Optional[_SealPrep]]:
+        """One vectorized pass computing every seal point's batch
+        structure, commit gas, timestamps, digests, gas rows and commit
+        txs (the stepped ``VectorRollup.seal`` math, all windows at
+        once — applying a seal afterwards is pure bookkeeping)."""
+        if self.rollup is None:
+            return []
+        from repro.core.engine import xor_fold_digest_segments
+        rollup = self.rollup
+        groups = self._collect_groups()
+        sizes = [sum(len(b) for b in g) for g in groups]
+        live = [i for i, s in enumerate(sizes) if s > 0]
+        preps: List[Optional[_SealPrep]] = [None] * len(groups)
+        if not live:
+            return preps
+        cat = [b for i in live for b in groups[i]]
+        t = np.concatenate([b.submit_time for b in cat])
+        g = np.concatenate([b.gas for b in cat])
+        f = np.concatenate([b.fn_id for b in cat])
+        s = np.concatenate([b.sender_id for b in cat])
+        n = t.shape[0]
+        gsz = np.array([sizes[i] for i in live], np.int64)
+        gstart = np.concatenate([[0], np.cumsum(gsz)[:-1]])
+        gidx = np.repeat(np.arange(len(live)), gsz)
+        within = np.arange(n) - gstart[gidx]
+        lane = within % rollup.n_lanes
+        pos = within // rollup.n_lanes
+        bil = pos // rollup.batch_size
+        # group-major lane-major order: identical within-group order to
+        # the stepped seal's lexsort((pos, lane))
+        order = np.lexsort((pos, lane, gidx))
+        lane_o, bil_o, g_o = lane[order], bil[order], gidx[order]
+        seg_new = np.empty(n, bool)
+        seg_new[0] = True
+        seg_new[1:] = ((g_o[1:] != g_o[:-1]) | (lane_o[1:] != lane_o[:-1])
+                       | (bil_o[1:] != bil_o[:-1]))
+        batch_id = np.cumsum(seg_new) - 1           # global across groups
+        nb = int(batch_id[-1]) + 1
+        starts = np.flatnonzero(seg_new)
+        fn_o, t_o = f[order], t[order]
+        counts = np.zeros((nb, len(rollup.fns)), np.int64)
+        np.add.at(counts, (batch_id, fn_o), 1)
+        base, percall = rollup._commit_gas_vectors()
+        commit = (counts > 0) @ base + counts @ percall
+        n_txs = counts.sum(axis=1)
+        now = np.maximum.reduceat(t_o, starts)
+        words = TxArrays(t_o, g[order], fn_o, s[order],
+                         rollup.fns).word_buffer()
+        roots = xor_fold_digest_segments(words, starts * 4)
+        # per-GROUP merged-buffer digests: groups are word-contiguous in
+        # lane-major order, so one more segmented fold covers all the
+        # stepped path's per-seal update digests
+        gdigest = xor_fold_digest_segments(words, gstart * 4)
+        # global batch ids: groups seal in plan order, so ids continue
+        # from the rollup's current count exactly like consecutive seals
+        first0 = rollup.n_batches
+        arrival_batch = np.empty(n, np.int64)
+        arrival_batch[order] = first0 + batch_id
+        batch_group = g_o[starts]                   # group of each batch
+        # per-batch commit ordering, grouped: the stepped seal posts each
+        # group's commits time-sorted (stable)
+        post = np.lexsort((np.arange(nb), now, batch_group))
+        inv_post = np.empty(nb, np.int64)
+        inv_post[post] = np.arange(nb)
+        now_p, commit_p = now[post], commit[post]
+        commit_fn = rollup.fns.id("rollup_commit")
+        lane_b = lane_o[starts]
+        bstart = np.searchsorted(batch_group, np.arange(len(live)))
+        bstop = np.concatenate([bstart[1:], [nb]])
+        for k, i in enumerate(live):
+            b0, b1 = int(bstart[k]), int(bstop[k])
+            # group k is contiguous both in arrival order (concat) and in
+            # the group-major sorted order, at the same slice
+            tsel = slice(int(gstart[k]), int(gstart[k] + gsz[k]))
+            rows = [{"batch": first0 + j, "lane": int(lane_b[j]),
+                     "n_txs": int(n_txs[j]), "commit": int(commit[j]),
+                     "verify": 0, "execute": 0, "total": int(commit[j])}
+                    for j in range(b0, b1)]
+            nb_g = b1 - b0
+            commit_batch = TxArrays(
+                now_p[b0:b1].astype(np.float64),
+                commit_p[b0:b1].astype(np.int64),
+                np.full(nb_g, commit_fn, np.int32),
+                np.zeros(nb_g, np.int32), rollup.fns)
+            preps[i] = _SealPrep(
+                TxArrays(t[tsel], g[tsel], f[tsel], s[tsel], rollup.fns),
+                n_txs[b0:b1], now[b0:b1], roots[b0:b1], int(gdigest[k]),
+                arrival_batch[tsel], first0 + b0, rows, commit_batch,
+                inv_post[b0:b1] - b0)
+        return preps
+
+    def _apply_seal(self, prep: Optional[_SealPrep]) -> None:
+        """Apply one precomputed seal point — the stepped ``seal()``'s
+        bookkeeping, with all the array math already done in bulk."""
+        rollup = self.rollup
+        if prep is None:                       # empty seal: window event
+            rollup._emit_window(0)
+            return
+        n = len(prep.txs)
+        if rollup._state_handlers:
+            rollup._apply_state(prep.txs)
+        first, nb = prep.first, len(prep.n_txs)
+        rollup.batch_digests.extend(int(r) for r in prep.roots)
+        rollup.update_digest = prep.update_digest
+        rollup._prov_starts.append(rollup._sealed_seq)
+        rollup._prov_batches.append(prep.arrival_batch)
+        rollup._sealed_seq += n
+        refs = rollup._l1_submit(prep.commit_batch)
+        rollup.batch_commit_ref.update(
+            (first + j, refs[int(prep.inv_post[j])]) for j in range(nb))
+        rollup.gas_log.extend(prep.rows)
+        rollup.n_batches += nb
+        rollup._last_time = float(prep.now.max())
+        rollup.prover.enqueue(rollup, first, prep.roots, prep.n_txs,
+                              prep.now, prep.rows)
+        rollup.events.emit(BatchSealed, time=rollup._last_time,
+                           shard=rollup._event_shard, first_batch=first,
+                           n_batches=nb, n_txs=n,
+                           digest=rollup.update_digest)
+        rollup._emit("batch_sealed", {
+            "first_batch": first, "n_batches": nb, "n_txs": n,
+            "digest": rollup.update_digest})
+        rollup._emit_window(nb)
+
+    # -- deferred block production ---------------------------------------------
+    def _pack_blocks(self, times: np.ndarray, n_vis: np.ndarray,
+                     markers: List[Tuple[int, int, int]]) -> None:
+        """Pack every deferred block in one ``block_pack`` kernel call
+        and splice the BlockPacked events to their stepped positions."""
+        chain = self.chain
+        if times.shape[0] == 0:
+            return
+        from repro.kernels.factory import get_kernel
+        chain._consolidate()
+        nblk = times.shape[0]
+        ptr0 = chain._ptr
+        stops = np.asarray(get_kernel("block_pack")(
+            chain._tmax[: chain._n], chain._gcum[: chain._n], times,
+            n_vis, chain.block_gas_limit, ptr0), np.int64)
+        starts = np.concatenate([[ptr0], stops[:-1]])
+        if chain._n:
+            gend = np.where(stops > 0,
+                            chain._gcum[np.maximum(stops - 1, 0)], 0)
+            gprev = np.where(starts > 0,
+                             chain._gcum[np.maximum(starts - 1, 0)], 0)
+            gas_used = np.where(stops > starts, gend - gprev, 0)
+        else:                                  # empty mempool: empty blocks
+            gas_used = np.zeros(nblk, np.int64)
+        ntx = stops - starts
+        final = int(stops[-1])
+        if final > ptr0:
+            chain._confirm[ptr0:final] = np.repeat(times, ntx)
+        dispatch = bool(chain._batch_handlers or chain._state_handlers)
+        assert chain.quorum(chain.n_validators - chain.n_validators // 3)
+        height0 = len(chain.blocks)
+        parent = chain.blocks[-1].block_hash
+        for b in range(nblk):
+            lo, hi = int(starts[b]), int(stops[b])
+            if dispatch and hi > lo:
+                self._dispatch_handlers(lo, hi)
+            blk = BlockStats(height0 + b, float(times[b]), int(ntx[b]),
+                             int(gas_used[b]), lo, hi, parent)
+            parent = blk.block_hash
+            chain.blocks.append(blk)
+        chain.total_gas += int(gas_used.sum())
+        chain._ptr = final
+        self._splice_block_events(times, ntx, gas_used, height0, markers)
+
+    def _dispatch_handlers(self, lo: int, hi: int) -> None:
+        """Per-(block, fn) handler dispatch — produce_block's contract,
+        on one deferred block's confirmed slice."""
+        chain = self.chain
+        counts = np.bincount(chain._f[lo:hi], minlength=len(chain.fns))
+        view = TxArrays(chain._t[lo:hi], chain._g[lo:hi],
+                        chain._f[lo:hi], chain._s[lo:hi], chain.fns)
+        for fid, h in chain._batch_handlers.items():
+            if fid < counts.shape[0] and counts[fid]:
+                h(chain.state, int(counts[fid]), view)
+        for fid, h in chain._state_handlers.items():
+            if fid < counts.shape[0] and counts[fid]:
+                m = view.fn_id == fid
+                h(chain.state_arrays,
+                  TxArrays(view.submit_time[m], view.gas[m],
+                           view.fn_id[m], view.sender_id[m], chain.fns))
+
+    def _splice_block_events(self, times, ntx, gas_used, height0,
+                             markers) -> None:
+        """Rebuild the typed stream with BlockPacked events at the
+        positions the stepped path emitted them, renumbering ``seq``."""
+        chain = self.chain
+        evs = chain.events._events
+        merged: List[Any] = []
+        prev = 0
+        for pos, blo, bn in markers:
+            merged.extend(evs[prev:pos])
+            prev = pos
+            for b in range(blo, blo + bn):
+                blk = chain.blocks[height0 + b]
+                merged.append(BlockPacked(
+                    seq=-1, time=float(times[b]), shard=None,
+                    height=blk.height, n_txs=int(ntx[b]),
+                    gas_used=int(gas_used[b]), block_hash=blk.block_hash))
+                chain._emit("block_packed", {
+                    "height": blk.height, "n_txs": int(ntx[b]),
+                    "gas_used": int(gas_used[b]),
+                    "block_hash": blk.block_hash})
+        merged.extend(evs[prev:])
+        # in-place seq renumber: the log owns its event objects and no
+        # cursor has advanced past a splice point (clients drained before
+        # the run started), so mutating seq is unobservable
+        for i, e in enumerate(merged):
+            if e.seq != i:
+                object.__setattr__(e, "seq", i)
+        evs[:] = merged

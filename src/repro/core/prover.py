@@ -205,6 +205,11 @@ class ProverPipeline:
         self._open: Dict[Any, List[ProofJob]] = {}     # sealed, unsettled
         self._closed: Dict[Any, List[SessionProof]] = {}  # awaiting agg
         self._jobs: Dict[Any, Dict[int, ProofJob]] = {}   # batch -> job
+        # drain schedule: (done_at, job_id, owner, job) min-heap so pump
+        # pops only the jobs that are actually due instead of scanning
+        # every open job per call (job_id is unique, so owners are never
+        # compared); settled jobs are skipped lazily via ``proved``
+        self._due: List[Tuple[float, int, Any, ProofJob]] = []
         self._next_job = 0
         self._next_session = 0
         self._next_agg = 0
@@ -232,6 +237,7 @@ class ProverPipeline:
             self._next_job += 1
             queue.append(job)
             jobs[job.batch] = job
+            heapq.heappush(self._due, (done, job.job, owner, job))
 
     # -- modeled prover drain ---------------------------------------------------
     def _complete(self, owner, job: ProofJob,
@@ -254,12 +260,19 @@ class ProverPipeline:
         complete every job whose modeled ``done_at`` is due, and (in
         ``"window"`` finalization) post the aggregates whose sessions
         have fully drained.  Returns the number of jobs completed."""
-        n_done = 0
-        for owner in list(self._jobs):
-            for job in self._jobs[owner].values():
-                if not job.proved and job.done_at <= now:
-                    self._complete(owner, job)
-                    n_done += 1
+        due: List[Tuple[Any, ProofJob]] = []
+        while self._due and self._due[0][0] <= now:
+            _, _, owner, job = heapq.heappop(self._due)
+            if not job.proved:
+                due.append((owner, job))
+        if due:
+            # emit in the owner-then-job order the full scan produced
+            # (owners by first-enqueue order — _jobs keeps every owner)
+            order = {id(o): i for i, o in enumerate(self._jobs)}
+            due.sort(key=lambda oj: (order[id(oj[0])], oj[1].job))
+            for owner, job in due:
+                self._complete(owner, job)
+        n_done = len(due)
         if self.finalize == "window":
             for owner in list(self._closed):
                 self._post_ready(owner, force=False, drained_only=True)

@@ -61,6 +61,10 @@ class ShardedRollup(EventHooks):
     """K-shard L2 fabric over one shared L1 (LedgerBackend face)."""
 
     soa_native = True
+    # the fabric seals per shard with cross-shard routing state between
+    # windows — core/fused.py cannot replay that as one plan yet, so
+    # Scheduler(fused="auto") keeps the Python-stepped path here
+    fused_capable = False
 
     def __init__(self, l1, n_shards: int = 1,
                  batch_size: int = ROLLUP_BATCH,

@@ -200,7 +200,10 @@ class VectorCohort:
     def start_task(self, global_params, opt, sel_idx: Sequence[int]):
         k = len(sel_idx)
         o = opt.init(global_params)
-        self._opt = jax.tree.map(lambda l: jnp.stack([l] * k), o)
+        # one broadcast dispatch per leaf — jnp.stack([l] * k) built k
+        # device arrays per leaf and dominated multi-task select windows
+        self._opt = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (k,) + l.shape), o)
 
     def _participation(self, sel_idx: np.ndarray) -> np.ndarray:
         lazy = self.is_lazy[sel_idx]

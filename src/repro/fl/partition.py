@@ -23,7 +23,6 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int,
         for client, part in enumerate(np.split(idx, cuts)):
             client_idx[client].extend(part.tolist())
     # rebalance tiny clients (deterministic round-robin steal)
-    sizes = [len(ci) for ci in client_idx]
     for i in range(n_clients):
         while len(client_idx[i]) < min_per_client:
             donor = int(np.argmax([len(c) for c in client_idx]))

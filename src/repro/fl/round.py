@@ -13,16 +13,13 @@ by launch/steps.py; benchmarks compare the two rooflines.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.aggregation import tree_flat
 from repro.models.model import Model
-from repro.sharding.specs import params_pspec_tree
 
 
 class FLRoundSpec(NamedTuple):

@@ -194,14 +194,20 @@ class Scheduler:
     ``seal_every``: seal rollup lane batches every k windows (0 = only the
     final flush, which preserves single-task batch-boundary equivalence
     with ``run_task``).
+    ``fused``: drive the ledger hot path through the core/fused.py plan-
+    then-execute loop — "auto" (on when the stack supports it), True
+    (assert support), or False (always Python-stepped).  Fused and stepped
+    runs are pinned to identical outputs (tests/test_fused.py).
     """
 
     def __init__(self, node, *, window: float = 1.0, seal_every: int = 0,
-                 background=None):
+                 background=None, fused="auto"):
         self.node = node
         self.window = window
         self.seal_every = seal_every
         self.background = background
+        self.fused = fused
+        self._loop = None           # active FusedWindowLoop during run()
         self.runtimes: List[TaskRuntime] = []
         self._bg_pos = 0
         # typed-event records collected by run() through the node's
@@ -229,7 +235,10 @@ class Scheduler:
         (object Rollup, VectorRollup, ShardedRollup) expose ``seal()``;
         the sharded fabric also records its fabric root here — this call
         IS the window-boundary commitment."""
-        self.node.rollup.seal()
+        if self._loop is not None:
+            self._loop.seal()
+        else:
+            self.node.rollup.seal()
 
     def _submit_background(self, t_end: float):
         if self.background is None:
@@ -250,9 +259,13 @@ class Scheduler:
             uniq = np.unique(sid)
             lut = np.array([chain.sender_id(f"client{int(u)}")
                             for u in uniq], np.int32)
-            chain.submit_arrays(TxArrays(
+            batch = TxArrays(
                 txs.submit_time[i:j], txs.gas[i:j], txs.fn_id[i:j],
-                lut[np.searchsorted(uniq, sid)], txs.fns))
+                lut[np.searchsorted(uniq, sid)], txs.fns)
+            if self._loop is not None:
+                self._loop.submit(chain, batch)
+            else:
+                chain.submit_arrays(batch)
         else:
             from repro.core.ledger import Tx
             for k in range(i, j):
@@ -277,6 +290,12 @@ class Scheduler:
         # genesis), and collect into fresh record lists
         client.events()
         self.window_records, self.settlement_records = [], []
+        from repro.core.fused import FusedWindowLoop, supports_fused
+        use_fused = (supports_fused(node.chain, node.rollup)
+                     if self.fused == "auto" else bool(self.fused))
+        if use_fused:
+            self._loop = FusedWindowLoop(node.chain, node.rollup)
+            node._fused = self._loop
         # keep the shared mempool time-sorted: before every protocol
         # emission, background txs stamped earlier than the clock are
         # drained in (both engines pack FIFO and head-of-line-stall on
@@ -310,20 +329,26 @@ class Scheduler:
                     # proof jobs drain on the shared window clock; pump
                     # BEFORE block production so window-finalized
                     # settlements land in the blocks that pack this window
-                    node.rollup.pump(t_end)
-                node.chain.run_until(t_end)
+                    (self._loop or node.rollup).pump(t_end)
+                (self._loop or node.chain).run_until(t_end)
                 t = t_end
                 w += 1
                 assert w < 1_000_000, "scheduler failed to make progress"
             self._submit_background(float("inf"))
             if node.rollup is not None:
-                node.rollup.flush()
+                (self._loop or node.rollup).flush()
             t_end = node._clock + 5.0
             if self.background is not None:
                 t_end = max(t_end, self.background.duration + 5.0)
-            node.chain.run_until(t_end)
+            (self._loop or node.chain).run_until(t_end)
+            if self._loop is not None:
+                # replay the whole recorded window loop as one pass:
+                # vectorized multi-window seals + one block-pack kernel
+                self._loop.execute()
         finally:
             node.pre_tx_hook = None
+            node._fused = None
+            self._loop = None
         for ev in client.events():
             if ev.kind == "window_settled":
                 self.window_records.append(ev)

@@ -82,7 +82,7 @@ class AutoDFL:
                 import warnings
                 warnings.warn(
                     f"AutoDFL kwargs {sorted(flags)} are deprecated; pass "
-                    f"spec=repro.api.NodeSpec(...) (see docs/MIGRATION.md)",
+                    "spec=repro.api.NodeSpec(...) (see docs/MIGRATION.md)",
                     DeprecationWarning, stacklevel=2)
             spec = NodeSpec.from_legacy(
                 rep_params=rep_params, don=don, seed=seed or 0,
@@ -145,6 +145,10 @@ class AutoDFL:
         # the Scheduler uses it to drain background traffic in time order
         # (both engines pack FIFO and stall on out-of-order future stamps)
         self.pre_tx_hook: Optional[Callable[[float], None]] = None
+        # active core/fused.py plan (set by Scheduler.run in fused mode):
+        # protocol emissions and the end-of-window state sync route through
+        # it so the whole window loop replays as one compiled pass
+        self._fused = None
 
     def trainer_index(self, trainer_id: str) -> int:
         return self._trainer_idx[trainer_id]
@@ -190,14 +194,23 @@ class AutoDFL:
         target = self._target()
         ids = np.array([target.sender_id(t) for t in self.trainer_ids],
                        np.int64)
-        sync_book_to_state(self.book, state, ids)
-        state.balances[ids] = [self.escrow.balances.get(t, 0.0)
-                               for t in self.trainer_ids]
         locked = {}
         for per_task in self.escrow.collateral.values():
             for who, amount in per_task.items():
                 locked[who] = locked.get(who, 0.0) + amount
-        state.stake[ids] = [locked.get(t, 0.0) for t in self.trainer_ids]
+        balances = [self.escrow.balances.get(t, 0.0)
+                    for t in self.trainer_ids]
+        stake = [locked.get(t, 0.0) for t in self.trainer_ids]
+        if self._fused is not None:
+            # window roots commit this scatter — journal it so the fused
+            # replay applies it between the same seal points
+            self._fused.sync_state(state, ids,
+                                   np.asarray(self.book.reputation,
+                                              np.float32), balances, stake)
+            return
+        sync_book_to_state(self.book, state, ids)
+        state.balances[ids] = balances
+        state.stake[ids] = stake
 
     def _tx(self, fn: str, sender: str, payload: Dict):
         self._tx_batch(fn, [sender], [payload])
@@ -228,7 +241,9 @@ class AutoDFL:
             batch = TxArrays(times, np.full(n, gas, np.int64),
                              np.full(n, fid, np.int32), sender_ids,
                              target.fns)
-            if self._route_shard is not None and hasattr(target, "shards"):
+            if self._fused is not None and self._fused.covers(target):
+                self._fused.submit(target, batch)
+            elif self._route_shard is not None and hasattr(target, "shards"):
                 # task-pinned shard routing (core/shards.py fabric)
                 target.submit_arrays(batch, shard=self._route_shard)
             else:

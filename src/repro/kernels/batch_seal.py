@@ -1,0 +1,99 @@
+"""Batch-seal kernel: per-batch xor-mix digests over a sealed tx stream.
+
+``VectorRollup.seal`` folds the lane-sorted word buffer into one digest
+per batch — ``[starts[i], starts[i+1])`` word segments through THE
+xor-mix (core/engine._mix / kernels.rollup_digest).  This module is the
+dedicated kernel for that inner fold, in three interchangeable impls
+(kernels/factory.py op ``"batch_seal"``):
+
+  * ``batch_seal_np`` — the bit-exact NumPy mirror (``reduceat``), and
+    the implementation behind ``engine.xor_fold_digest_segments``.
+  * ``batch_seal_jax`` — one jitted prefix-xor scan; segment digests are
+    prefix differences (xor is its own inverse).
+  * ``batch_seal_pallas`` — segments scattered into a zero-padded
+    (n_batches, width) tile (zero words mix to zero and fold away, the
+    same padding contract as ``rollup_chunk_digests``), then one Pallas
+    grid pass folds each row — the ``_chunk_kernel`` pattern with a
+    batch per grid step.
+
+All three return identical u32 digests for every segmentation (pinned
+by tests/test_kernels.py on the {x64 on/off} CPU matrix in CI).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.state import MIX_MULT, MIX_SEED
+
+
+def batch_seal_np(words: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """NumPy mirror: one digest per ``[starts[i], starts[i+1])`` word
+    segment.  Segments must be non-empty (seal batches always are)."""
+    w = np.ascontiguousarray(words, np.uint32)
+    mixed = (w ^ (w >> np.uint32(16))) * MIX_MULT
+    return MIX_SEED ^ np.bitwise_xor.reduceat(mixed, starts)
+
+
+@jax.jit
+def _seal_prefix(words, starts):
+    mixed = (words ^ (words >> jnp.uint32(16))) * jnp.uint32(0x85EBCA6B)
+    prefix = jax.lax.associative_scan(jnp.bitwise_xor, mixed)
+    ends = jnp.concatenate([starts[1:], jnp.asarray(
+        [words.shape[0]], starts.dtype)])
+    lead = jnp.where(starts > 0, prefix[jnp.maximum(starts - 1, 0)],
+                     jnp.uint32(0))
+    return jnp.uint32(0x9E3779B9) ^ (prefix[ends - 1] ^ lead)
+
+
+def batch_seal_jax(words: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """XLA impl: one prefix-xor scan, segment digests by prefix xor."""
+    return np.asarray(_seal_prefix(jnp.asarray(words, jnp.uint32),
+                                   jnp.asarray(starts, jnp.int32)))
+
+
+def _seal_kernel(x_ref, o_ref):
+    x = x_ref[...]                                # (1, rows, 128)
+    mixed = jnp.bitwise_xor(x, x >> 16) * jnp.uint32(0x85EBCA6B)
+    o_ref[...] = jax.lax.reduce(mixed, jnp.uint32(0), jnp.bitwise_xor, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _seal_pallas_call(tiles, *, interpret: bool):
+    nb, rows, lanes = tiles.shape
+    out = pl.pallas_call(
+        _seal_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, rows, lanes), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, lanes), jnp.uint32),
+        interpret=interpret,
+    )(tiles)
+    return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
+        out, jnp.uint32(0), jnp.bitwise_xor, (1,))
+
+
+def batch_seal_pallas(words: np.ndarray, starts: np.ndarray, *,
+                      interpret: bool | None = None) -> np.ndarray:
+    """Pallas impl: scatter segments into a zero-padded row per batch
+    (zero words fold away) and fold rows on a per-batch grid."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
+    w = np.ascontiguousarray(words, np.uint32)
+    starts = np.asarray(starts, np.int64)
+    nb = len(starts)
+    lens = np.diff(np.concatenate([starts, [len(w)]]))
+    width = max(128, int(-(-int(lens.max()) // 128)) * 128)
+    tiles = np.zeros((nb, width), np.uint32)
+    seg = np.repeat(np.arange(nb), lens)
+    tiles[seg, np.arange(len(w)) - starts[seg]] = w
+    lanes = 128
+    out = _seal_pallas_call(
+        jnp.asarray(tiles.reshape(nb, width // lanes, lanes)),
+        interpret=bool(interpret))
+    return np.asarray(out)

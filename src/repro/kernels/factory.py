@@ -1,0 +1,113 @@
+"""Swappable kernel factory: one registry for every ledger hot-path op.
+
+xformers-``block_factory`` shape: each op registers its interchangeable
+implementations under string keys, and call sites ask the factory
+instead of hard-wiring one backend:
+
+    from repro.kernels.factory import get_kernel
+    stops = get_kernel("block_pack")(tmax, gcum, times, n_vis, limit, p0)
+
+Impl keys (per-op subsets of):
+
+  * ``"numpy"``  — the bit-exact NumPy mirror.  This is also the object
+    path's semantics: the per-tx Python engines (core/ledger.py,
+    core/rollup.py) are pinned equal to the mirrors by tests.
+  * ``"jax"``    — jitted XLA program (scan / prefix-scan forms).
+  * ``"pallas"`` — the Pallas TPU kernel (``interpret=True`` off-TPU).
+
+Selection: an explicit ``impl=`` wins; else the ``REPRO_KERNEL_IMPL``
+env var; else ``"auto"`` — the op's registered TPU default on a TPU
+backend, its CPU default otherwise.  Every impl of an op takes and
+returns host NumPy values with identical semantics (bit-exact, pinned
+by tests/test_kernels.py), so swapping is a pure performance choice.
+
+Adding a kernel: implement the mirrors in ``kernels/<op>.py``, register
+them here in ``_load()``, and pin all impls equal in
+tests/test_kernels.py — see docs/KERNELS.md.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Tuple
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_DEFAULTS: Dict[str, Dict[str, str]] = {}      # op -> {"cpu": .., "tpu": ..}
+_LOADED = False
+
+
+def register_kernel(op: str, impl: str, fn: Callable, *,
+                    cpu_default: bool = False,
+                    tpu_default: bool = False) -> Callable:
+    """Register ``fn`` as implementation ``impl`` of ``op``."""
+    _REGISTRY.setdefault(op, {})[impl] = fn
+    d = _DEFAULTS.setdefault(op, {})
+    if cpu_default or "cpu" not in d:
+        d["cpu"] = impl
+    if tpu_default or "tpu" not in d:
+        d["tpu"] = impl
+    return fn
+
+
+def _load() -> None:
+    """Lazy one-shot registration of the built-in ledger ops (imports
+    deferred so importing the factory costs nothing)."""
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.kernels import batch_seal as bs
+    from repro.kernels import block_pack as bp
+
+    # multi-block FIFO packing (core/fused.py window loop)
+    register_kernel("block_pack", "numpy", bp.block_pack_np)
+    register_kernel("block_pack", "jax", bp.block_pack_jax,
+                    cpu_default=True, tpu_default=True)
+    register_kernel("block_pack", "pallas", bp.block_pack_pallas)
+
+    # per-batch seal digests (VectorRollup.seal segment fold)
+    register_kernel("batch_seal", "numpy", bs.batch_seal_np,
+                    cpu_default=True)
+    register_kernel("batch_seal", "jax", bs.batch_seal_jax)
+    register_kernel("batch_seal", "pallas", bs.batch_seal_pallas,
+                    tpu_default=True)
+
+    # merged update-buffer digest (seal commitment; scalar u32 out)
+    def _digest_np(words):
+        from repro.core.engine import xor_fold_digest
+        return xor_fold_digest(words)
+
+    def _digest_pallas(words):
+        import jax.numpy as jnp
+
+        import numpy as np
+        from repro.kernels.ops import rollup_digest
+        return int(rollup_digest(jnp.asarray(
+            np.ascontiguousarray(words, np.uint32))))
+
+    register_kernel("rollup_digest", "numpy", _digest_np, cpu_default=True)
+    register_kernel("rollup_digest", "pallas", _digest_pallas,
+                    tpu_default=True)
+
+
+def available_impls(op: str) -> Tuple[str, ...]:
+    _load()
+    return tuple(sorted(_REGISTRY.get(op, {})))
+
+
+def get_kernel(op: str, impl: str | None = None) -> Callable:
+    """Resolve ``op`` to one implementation (see module docstring)."""
+    _load()
+    try:
+        table = _REGISTRY[op]
+    except KeyError:
+        raise KeyError(f"unknown kernel op {op!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+    choice = impl or os.environ.get("REPRO_KERNEL_IMPL") or "auto"
+    if choice == "auto":
+        from repro.core.state import tpu_digest_backend
+        choice = _DEFAULTS[op]["tpu" if tpu_digest_backend() else "cpu"]
+    try:
+        return table[choice]
+    except KeyError:
+        raise KeyError(f"kernel op {op!r} has no impl {choice!r}; "
+                       f"available: {sorted(table)}") from None

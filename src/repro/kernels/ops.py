@@ -16,7 +16,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gmm import gmm as _gmm
 from repro.kernels.model_distance import model_distance as _dist
 from repro.kernels.rollup_digest import rollup_digest as _digest
-from repro.kernels.slstm_scan import expand_block_diag, slstm_scan as _slstm
+from repro.kernels.slstm_scan import slstm_scan as _slstm
 from repro.kernels.weighted_agg import weighted_agg as _wagg
 
 

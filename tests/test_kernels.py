@@ -110,3 +110,126 @@ def test_rollup_digest_detects_tampering():
     d0 = rollup_digest(buf, interpret=True)
     d1 = rollup_digest(buf.at[1234].add(1e-6), interpret=True)
     assert d0 != d1
+
+
+# -- ledger hot-path kernels: numpy / jax / pallas pinned BIT-EXACT -----------
+# (these are integer/bit-pattern kernels — no tolerance, any backend, any
+# JAX_ENABLE_X64 setting; CI runs this module on the {x64 on, x64 off}
+# matrix with JAX_PLATFORMS=cpu pinned)
+
+def _pack_stream(n_txs, n_blocks, seed, gas_limit):
+    """Random mempool + block grid in produce_block's representation."""
+    g = np.random.default_rng(seed)
+    submit = np.cumsum(g.exponential(0.02, n_txs))
+    tmax = np.maximum.accumulate(submit)
+    gcum = np.cumsum(g.integers(21_000, 120_000, n_txs).astype(np.int64))
+    times = np.cumsum(g.uniform(0.05, 1.5, n_blocks))
+    # nondecreasing visibility: txs stage between block edges
+    n_vis = np.sort(g.integers(0, n_txs + 1, n_blocks)).astype(np.int64)
+    return tmax, gcum, times, n_vis, gas_limit
+
+
+@pytest.mark.parametrize("n_txs,n_blocks,seed,gas_limit", [
+    (1, 1, 0, 9_000_000),
+    (100, 7, 1, 9_000_000),
+    (1000, 33, 2, 300_000),            # gas-capped: head-of-line carry
+    (513, 16, 3, 2**40),               # limit above any cumsum: time-bound
+    (64, 5, 4, 21_000),                # ~one tx per block
+])
+def test_block_pack_impls_bit_exact(n_txs, n_blocks, seed, gas_limit):
+    from repro.kernels.block_pack import (block_pack_jax, block_pack_np,
+                                          block_pack_pallas)
+    args = _pack_stream(n_txs, n_blocks, seed, gas_limit)
+    want = block_pack_np(*args, 0)
+    assert want.dtype == np.int64
+    np.testing.assert_array_equal(block_pack_jax(*args, 0), want)
+    np.testing.assert_array_equal(
+        block_pack_pallas(*args, 0, interpret=True), want)
+    # nonzero start pointer (mid-run mempool state)
+    p0 = int(want[0])
+    want_p = block_pack_np(*args, p0)
+    np.testing.assert_array_equal(block_pack_jax(*args, p0), want_p)
+
+
+def test_block_pack_matches_stepped_produce_block():
+    """The kernel IS produce_block's packing decision, N blocks at once."""
+    from repro.core.engine import FnRegistry, TxArrays, VectorChain
+    from repro.kernels.block_pack import block_pack_np
+    g = np.random.default_rng(11)
+    n = 200
+    fns = FnRegistry()
+    fid = fns.id("bgPing")
+    batch = TxArrays(np.cumsum(g.exponential(0.05, n)),
+                     g.integers(21_000, 90_000, n).astype(np.int64),
+                     np.full(n, fid, np.int32), np.zeros(n, np.int32), fns)
+    chain = VectorChain()
+    chain.submit_arrays(batch)
+    chain.run_until(float(batch.submit_time[-1]) + 2.0)
+    stepped = [(b.start, b.stop) for b in chain.blocks[1:]]
+    times = np.array([b.time for b in chain.blocks[1:]])
+    chain2 = VectorChain()
+    chain2.submit_arrays(batch)
+    chain2._consolidate()
+    stops = block_pack_np(chain2._tmax[:n], chain2._gcum[:n], times,
+                          np.full(len(times), n, np.int64),
+                          chain2.block_gas_limit, 0)
+    starts = np.concatenate([[0], stops[:-1]])
+    assert list(zip(starts.tolist(), stops.tolist())) == stepped
+
+
+@pytest.mark.parametrize("n_words,n_segs,seed", [
+    (4, 1, 0),
+    (4096, 17, 1),
+    (100_000, 257, 2),
+    (128, 128, 3),                     # one word per segment
+])
+def test_batch_seal_impls_bit_exact(n_words, n_segs, seed):
+    from repro.kernels.batch_seal import (batch_seal_jax, batch_seal_np,
+                                          batch_seal_pallas)
+    g = np.random.default_rng(seed)
+    words = g.integers(0, 2**32, n_words, dtype=np.uint64).astype(np.uint32)
+    cuts = np.sort(g.choice(np.arange(1, n_words), n_segs - 1,
+                            replace=False)) if n_segs > 1 else \
+        np.empty(0, np.int64)
+    starts = np.concatenate([[0], cuts]).astype(np.int64)
+    want = batch_seal_np(words, starts)
+    assert want.dtype == np.uint32 and want.shape == (n_segs,)
+    np.testing.assert_array_equal(batch_seal_jax(words, starts), want)
+    np.testing.assert_array_equal(
+        batch_seal_pallas(words, starts, interpret=True), want)
+
+
+def test_batch_seal_matches_single_digest():
+    """One segment == the scalar xor_fold_digest the object path uses."""
+    from repro.core.engine import xor_fold_digest
+    from repro.kernels.batch_seal import batch_seal_np
+    g = np.random.default_rng(5)
+    words = g.integers(0, 2**32, 777, dtype=np.uint64).astype(np.uint32)
+    out = batch_seal_np(words, np.array([0], np.int64))
+    assert int(out[0]) == xor_fold_digest(words)
+
+
+def test_kernel_factory_selection():
+    from repro.kernels import factory
+    from repro.kernels.block_pack import block_pack_np
+    assert factory.get_kernel("block_pack", "numpy") is block_pack_np
+    assert set(factory.available_impls("block_pack")) == \
+        {"numpy", "jax", "pallas"}
+    assert set(factory.available_impls("batch_seal")) == \
+        {"numpy", "jax", "pallas"}
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        factory.get_kernel("no_such_op")
+    with pytest.raises(KeyError, match="no impl"):
+        factory.get_kernel("block_pack", "cuda")
+    # env-var override is honored by the default resolution path
+    import os
+    old = os.environ.get("REPRO_KERNEL_IMPL")
+    os.environ["REPRO_KERNEL_IMPL"] = "numpy"
+    try:
+        assert factory.get_kernel("batch_seal") is \
+            factory.get_kernel("batch_seal", "numpy")
+    finally:
+        if old is None:
+            del os.environ["REPRO_KERNEL_IMPL"]
+        else:
+            os.environ["REPRO_KERNEL_IMPL"] = old
