@@ -49,6 +49,7 @@ FLOORS: Dict[str, float] = {
     "BENCH_protocol.window_loop_speedup": 1.0,
     "BENCH_engine.speedup": 1.0,
     "BENCH_shards.scaling": 1.5,
+    "BENCH_shards.wall_scaling": 1.1,
     "BENCH_prover.verify_gas_reduction": 4.0,
 }
 
@@ -62,6 +63,8 @@ TOLERANCE: Dict[str, float] = {
     "BENCH_protocol.window_loop_speedup": 0.3,
     "BENCH_engine.speedup": 0.4,
     "BENCH_shards.scaling": 0.4,
+    # measured per-lane seal walls: most timer-noise-exposed headline
+    "BENCH_shards.wall_scaling": 0.45,
 }
 
 

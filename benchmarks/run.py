@@ -46,6 +46,7 @@ _HEADLINES = {
         "assert_point": d["assert_point"]},
     "BENCH_shards": lambda d: {
         "scaling": d["scaling"],
+        "wall_scaling": d["wall_scaling"],
         "shard_counts": d["shard_counts"],
         "state_root": d["state_root"]},
     "BENCH_prover": lambda d: {

@@ -303,15 +303,23 @@ class NodeClient:
         return log if log is not None else getattr(self.chain, "events")
 
     def capabilities(self) -> frozenset:
-        """Typed-event kinds this backend emits through ``events()``.
+        """Typed-event kinds this backend emits through ``events()``,
+        plus the execution-path marker ``"fused_window_loop"`` when the
+        stack can run the core/fused.py plan-then-execute loop (what
+        ``Scheduler(fused="auto")`` will pick — a non-capable stack falls
+        back to the Python-stepped loop, with a one-time log).
 
         Every node emits ``block_packed`` (L1 block production); rollup
         nodes add the proof lifecycle.  Use this instead of probing —
         chain-only nodes are a smaller surface, not an error."""
+        from repro.core.fused import supports_fused
         caps = {"block_packed"}
         if getattr(self.target, "prover", None) is not None:
             caps |= {"batch_sealed", "proof_generated",
                      "aggregate_verified", "window_settled"}
+        rollup = None if self.target is self.chain else self.target
+        if supports_fused(self.chain, rollup):
+            caps.add("fused_window_loop")
         return frozenset(caps)
 
     def events(self, kinds=None) -> List[LedgerEvent]:

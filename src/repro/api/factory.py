@@ -73,7 +73,8 @@ def build_stack(spec: LedgerSpec, *, fns=None, state=None
             gas_table=node.chain.gas_table, prove_time=prove_time,
             per_tx_time=ru.per_tx_time, n_lanes=ru.n_lanes,
             digest_backend=ru.digest_backend, route=node.shards.route,
-            state=state, **prover_kw)
+            state=state, interconnect=node.shards.interconnect,
+            mesh=node.shards.mesh, **prover_kw)
     if node.chain.backend == "vector":
         from repro.core.engine import VectorRollup
         return chain, VectorRollup(

@@ -29,6 +29,7 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.interconnect import InterconnectSpec
 from repro.core.oracle import DONConfig
 from repro.core.reputation import ReputationParams
 
@@ -123,17 +124,35 @@ class ShardSpec:
     ``fabric=True`` forces the ``ShardedRollup`` wrapper even at one
     shard — bit-equivalent to ``VectorRollup`` (pinned by tests) but with
     fabric roots and per-shard receipts.
+
+    ``mesh`` governs whether the fused window loop folds the K shard
+    lanes' seal digests through the mesh-mapped ``shard_seal`` kernel
+    (kernels/shard_lanes.py over launch/mesh.make_shard_mesh): ``"auto"``
+    uses the device mesh exactly when more than one local device exists,
+    ``"on"``/``"off"`` force it.  A pure performance choice — every impl
+    is bit-exact (pinned by tests/test_shard_lanes.py).
+
+    ``interconnect`` (core/interconnect.InterconnectSpec) overrides the
+    fabric's modeled per-link wire costs — shard->L1 root gathering,
+    shard<->shard settlement scatter, cohort->shard submission.  ``None``
+    means the default single-datacenter links; the model only feeds the
+    benchmark latency decomposition, never the Table-II numbers.
     """
 
     count: int = 1
     route: str = "hash"                 # "hash" | "least_loaded"
     fabric: bool = False
+    mesh: str = "auto"                  # "auto" | "on" | "off"
+    interconnect: Optional[InterconnectSpec] = None
 
     def __post_init__(self):
         if self.count < 1:
             raise ValueError("shard count must be >= 1")
         if self.route not in ("hash", "least_loaded"):
             raise ValueError(f"unknown shard route {self.route!r}")
+        if self.mesh not in ("auto", "on", "off"):
+            raise ValueError(f"unknown shard mesh mode {self.mesh!r}; "
+                             "choose from ('auto', 'on', 'off')")
 
     @property
     def wants_fabric(self) -> bool:

@@ -37,9 +37,18 @@ visible difference is legacy ``EventHooks`` callback TIMING: string-key
 subscribers see ``block_packed`` callbacks at ``execute()`` instead of
 mid-run (relative order among block_packed callbacks is preserved).
 
-Scope: ``VectorChain`` alone or ``VectorChain`` + ``VectorRollup``.
-The sharded fabric and the object engines keep the stepped path
-(``Scheduler(fused="auto")`` falls back automatically).
+Scope: ``VectorChain`` alone, ``VectorChain`` + ``VectorRollup``, or
+``VectorChain`` + ``ShardedRollup`` — the fabric runs as K shard
+**lanes**: routing decisions (hash split / least-loaded argmin / task
+pins) are taken once at record time against the live ``_submitted``
+counters, each lane's seal groups run through the same one-concat/
+lexsort precompute, the K lanes' digest folds batch into the
+``shard_seal`` kernel (kernels/shard_lanes.py — optionally
+``shard_map``-ped over a ``"shard"`` device mesh), and every window
+closes through ``ShardedRollup._finish_window`` exactly like a stepped
+seal.  The object engines keep the stepped path
+(``Scheduler(fused="auto")`` falls back automatically, with a one-time
+log).
 """
 from __future__ import annotations
 
@@ -55,11 +64,10 @@ from repro.core.events import BatchSealed, BlockPacked
 
 def supports_fused(chain, rollup) -> bool:
     """True when the (chain, rollup) pair can run the fused loop: a SoA
-    L1 and (optionally) an unsharded SoA rollup face.  Backends declare
-    themselves via a ``fused_capable`` class marker (VectorChain and
-    VectorRollup set it True; the object engines lack it; ShardedRollup
-    sets it False — its per-shard seals with cross-shard routing state
-    cannot replay as one plan)."""
+    L1 and (optionally) a SoA rollup face.  Backends declare themselves
+    via a ``fused_capable`` class marker (VectorChain, VectorRollup and
+    ShardedRollup set it True; the object engines lack it and fall back
+    to the stepped path)."""
     if not getattr(chain, "fused_capable", False):
         return False
     return rollup is None or getattr(rollup, "fused_capable", False)
@@ -101,23 +109,46 @@ class FusedWindowLoop:
     def __init__(self, chain: VectorChain,
                  rollup: Optional[VectorRollup] = None):
         assert supports_fused(chain, rollup), \
-            "fused loop needs a VectorChain (+ optional VectorRollup)"
+            "fused loop needs a VectorChain (+ optional SoA rollup face)"
         self.chain = chain
         self.rollup = rollup
+        # the sharded fabric runs as K shard LANES; a plain VectorRollup
+        # is the one-lane case of the same machinery
+        self.fabric = rollup if hasattr(rollup, "shards") else None
+        self._lanes: List[VectorRollup] = (
+            list(rollup.shards) if self.fabric is not None
+            else ([rollup] if rollup is not None else []))
         self._plan: List[Tuple] = []
-        # journaled rollup staging; adopt anything already pending so the
-        # first planned seal covers it, like a stepped seal would
-        self._r_batches: List[TxArrays] = []
-        if rollup is not None and rollup._pending:
-            self._r_batches.extend(rollup._pending)
-            rollup._pending, rollup._pending_n = [], 0
+        # journaled per-lane rollup staging; adopt anything already
+        # pending so the first planned seal covers it, like a stepped
+        # seal would
+        self._r_batches: List[List[TxArrays]] = [[] for _ in self._lanes]
+        for k, lane in enumerate(self._lanes):
+            if lane._pending:
+                self._r_batches[k].extend(lane._pending)
+                lane._pending, lane._pending_n = [], 0
         self._executed = False
 
     # -- record phase ----------------------------------------------------------
-    def submit(self, target, batch: TxArrays):
+    def _stage(self, k: int, batch: TxArrays) -> Tuple[int, int]:
+        """Journal one batch into lane ``k``, assigning its seq range now
+        (receipts hold [lo, hi) before execute, same as a live submit)."""
+        lane = self._lanes[k]
+        lo = lane._next_seq
+        lane._next_seq += len(batch)
+        self._r_batches[k].append(batch)
+        return lo, lo + len(batch)
+
+    def submit(self, target, batch: TxArrays, shard=None):
         """Route one SoA batch: journaled, not staged — rollup txs only
         order relative to seal points (watermarked), chain txs replay
-        in-order so arrival indices interleave with commits exactly."""
+        in-order so arrival indices interleave with commits exactly.
+
+        On the fabric the routing decision itself happens NOW (vectorized
+        hash split / least-loaded argmin over the live ``_submitted``
+        counters / a task-pinned ``shard``), exactly as the stepped
+        ``ShardedRollup.submit_arrays`` would take it, and the per-tx
+        ``(shard, seq)`` provenance is returned immediately."""
         if target is self.rollup and self.rollup is not None:
             rollup = self.rollup
             if batch.fns is not rollup.fns:
@@ -126,12 +157,9 @@ class FusedWindowLoop:
                 batch = TxArrays(batch.submit_time, batch.gas,
                                  remap[batch.fn_id] if len(batch) else
                                  batch.fn_id, batch.sender_id, rollup.fns)
-            # assign the seq range now (receipts hold [lo, hi) before
-            # execute, same as a live submit)
-            lo = rollup._next_seq
-            rollup._next_seq += len(batch)
-            self._r_batches.append(batch)
-            return lo, lo + len(batch)
+            if self.fabric is None:
+                return self._stage(0, batch)
+            return self._route_fabric(batch, shard)
         assert target is self.chain, "unknown fused submit target"
         if batch.fns is not self.chain.fns:
             # same remap submit_arrays would do — at RECORD time, so fn
@@ -144,17 +172,51 @@ class FusedWindowLoop:
         self._plan.append(("tx", batch))
         return None
 
+    def _route_fabric(self, batch: TxArrays, shard):
+        """The stepped ``ShardedRollup.submit_arrays`` routing, replayed
+        at record time: same ``_submitted`` bookkeeping, same wire-cost
+        accounting, same ``(shard_of, seq_of)`` provenance — the only
+        difference is that the sub-batches journal into lanes instead of
+        landing in shard pending queues."""
+        fab = self.fabric
+        n = len(batch)
+        if shard is None and fab.route == "least_loaded":
+            shard = int(np.argmin(fab._submitted))
+        if shard is not None or fab.n_shards == 1:
+            k = int(shard or 0)
+            fab._submitted[k] += n
+            pinned = np.zeros(fab.n_shards, np.int64)
+            pinned[k] = n
+            fab._wire_submit(pinned)
+            lo, hi = self._stage(k, batch)
+            return (np.full(n, k, np.int64),
+                    np.arange(lo, hi, dtype=np.int64))
+        from repro.core.shards import _hash_route
+        lanes = _hash_route(batch.sender_id, fab.n_shards)
+        fab._wire_submit(np.bincount(lanes, minlength=fab.n_shards))
+        seq_of = np.empty(n, np.int64)
+        for k in range(fab.n_shards):
+            m = lanes == k
+            if m.any():
+                fab._submitted[k] += int(m.sum())
+                lo, hi = self._stage(k, TxArrays(
+                    batch.submit_time[m], batch.gas[m], batch.fn_id[m],
+                    batch.sender_id[m], fab.fns))
+                seq_of[m] = np.arange(lo, hi, dtype=np.int64)
+        return lanes.astype(np.int64), seq_of
+
     def covers(self, target) -> bool:
         return target is self.chain or (self.rollup is not None
                                         and target is self.rollup)
 
     def seal(self):
-        """Plan a seal point at the current rollup staging watermark."""
+        """Plan a seal point at the current per-lane staging watermarks."""
         assert self.rollup is not None
         # the stepped path registers the commit fn at its first seal —
         # keep the registry's id order identical
         self.rollup.fns.id("rollup_commit")
-        self._plan.append(("seal", len(self._r_batches)))
+        self._plan.append(("seal",
+                           tuple(len(rb) for rb in self._r_batches)))
 
     def pump(self, t_end: float):
         self._plan.append(("pump", float(t_end)))
@@ -212,7 +274,14 @@ class FusedWindowLoop:
                 chain_buf.append(entry[1])
             elif op == "seal":
                 flush_chain()
-                self._apply_seal(preps[seal_i])
+                if self.fabric is not None:
+                    # lanes seal in shard order, then the fabric merges
+                    # the window — the stepped ShardedRollup.seal()
+                    self.fabric._finish_window(
+                        [self._apply_seal(preps[k][seal_i], lane)
+                         for k, lane in enumerate(self._lanes)])
+                else:
+                    self._apply_seal(preps[0][seal_i], rollup)
                 seal_i += 1
             elif op == "pump":
                 flush_chain()
@@ -220,7 +289,10 @@ class FusedWindowLoop:
             elif op == "settle":
                 flush_chain()
                 rollup.settle_session()
-                rollup.prover.drain(rollup)
+                if self.fabric is not None:
+                    rollup.prover.drain()      # fabric-wide forced drain
+                else:
+                    rollup.prover.drain(rollup)
             elif op == "sync":
                 _, state, ids, rep, bal, stake = entry
                 state.ensure_ids(ids)
@@ -245,36 +317,48 @@ class FusedWindowLoop:
                           np.asarray(n_vis, np.int64), markers)
 
     # -- seal precompute + per-point application -------------------------------
-    def _collect_groups(self) -> List[List[TxArrays]]:
-        """Split the journaled rollup staging at the planned watermarks;
-        batches past the last watermark return to the real pending queue
-        (they are what a stepped run would leave unsealed)."""
+    def _collect_groups(self, k: int) -> List[List[TxArrays]]:
+        """Split lane ``k``'s journaled staging at the planned watermarks;
+        batches past the last watermark return to the lane's real pending
+        queue (they are what a stepped run would leave unsealed)."""
         groups, prev = [], 0
         for entry in self._plan:
             if entry[0] == "seal":
-                groups.append(self._r_batches[prev:entry[1]])
-                prev = entry[1]
-        tail = self._r_batches[prev:]
+                groups.append(self._r_batches[k][prev:entry[1][k]])
+                prev = entry[1][k]
+        tail = self._r_batches[k][prev:]
         if tail:
-            self.rollup._pending.extend(tail)
-            self.rollup._pending_n += sum(len(b) for b in tail)
+            lane = self._lanes[k]
+            lane._pending.extend(tail)
+            lane._pending_n += sum(len(b) for b in tail)
         return groups
 
-    def _prepare_seals(self) -> List[Optional[_SealPrep]]:
-        """One vectorized pass computing every seal point's batch
-        structure, commit gas, timestamps, digests, gas rows and commit
-        txs (the stepped ``VectorRollup.seal`` math, all windows at
-        once — applying a seal afterwards is pure bookkeeping)."""
+    def _prepare_seals(self) -> List[List[Optional[_SealPrep]]]:
+        """One vectorized pass per lane computing every seal point's
+        batch structure, commit gas, timestamps, gas rows and commit txs
+        (the stepped ``VectorRollup.seal`` math, all windows at once —
+        applying a seal afterwards is pure bookkeeping), followed by ONE
+        batched digest fold across all lanes: on the fabric the K lanes'
+        segmented xor-folds stack into the ``shard_seal`` kernel's
+        ``(K, W)`` word grid (two calls for the whole run — per-batch tx
+        roots and per-window update digests), optionally ``shard_map``-ped
+        over the ``"shard"`` device mesh.  Indexed ``[lane][seal_i]``."""
         if self.rollup is None:
             return []
-        from repro.core.engine import xor_fold_digest_segments
-        rollup = self.rollup
-        groups = self._collect_groups()
+        structs = [self._lane_struct(lane, self._collect_groups(k))
+                   for k, lane in enumerate(self._lanes)]
+        self._fold_digests(structs)
+        return [self._lane_preps(lane, structs[k])
+                for k, lane in enumerate(self._lanes)]
+
+    def _lane_struct(self, rollup: VectorRollup,
+                     groups: List[List[TxArrays]]) -> Optional[Dict]:
+        """Everything the stepped ``seal()`` derives for one lane's
+        groups EXCEPT the digest folds (those batch across lanes)."""
         sizes = [sum(len(b) for b in g) for g in groups]
         live = [i for i, s in enumerate(sizes) if s > 0]
-        preps: List[Optional[_SealPrep]] = [None] * len(groups)
         if not live:
-            return preps
+            return None
         cat = [b for i in live for b in groups[i]]
         t = np.concatenate([b.submit_time for b in cat])
         g = np.concatenate([b.gas for b in cat])
@@ -308,13 +392,8 @@ class FusedWindowLoop:
         now = np.maximum.reduceat(t_o, starts)
         words = TxArrays(t_o, g[order], fn_o, s[order],
                          rollup.fns).word_buffer()
-        roots = xor_fold_digest_segments(words, starts * 4)
-        # per-GROUP merged-buffer digests: groups are word-contiguous in
-        # lane-major order, so one more segmented fold covers all the
-        # stepped path's per-seal update digests
-        gdigest = xor_fold_digest_segments(words, gstart * 4)
         # global batch ids: groups seal in plan order, so ids continue
-        # from the rollup's current count exactly like consecutive seals
+        # from the lane's current count exactly like consecutive seals
         first0 = rollup.n_batches
         arrival_batch = np.empty(n, np.int64)
         arrival_batch[order] = first0 + batch_id
@@ -324,11 +403,90 @@ class FusedWindowLoop:
         post = np.lexsort((np.arange(nb), now, batch_group))
         inv_post = np.empty(nb, np.int64)
         inv_post[post] = np.arange(nb)
-        now_p, commit_p = now[post], commit[post]
+        return {"live": live, "t": t, "g": g, "f": f, "s": s,
+                "gsz": gsz, "gstart": gstart, "nb": nb, "starts": starts,
+                "n_txs": n_txs, "now": now, "commit": commit,
+                "words": words, "first0": first0,
+                "arrival_batch": arrival_batch,
+                "batch_group": batch_group, "post": post,
+                "inv_post": inv_post, "lane_b": lane_o[starts],
+                "roots": None, "gdigest": None}
+
+    def _fold_digests(self, structs: List[Optional[Dict]]) -> None:
+        """Fill every lane's per-batch tx roots and per-group update
+        digests.  Single lane: the two ``batch_seal`` segmented folds of
+        the stepped path.  Fabric: the K lanes' folds stack into the
+        ``shard_seal`` kernel — two calls total, each folding every
+        lane's segments at once over the lane-rows word grid."""
+        live = [st for st in structs if st is not None]
+        if not live:
+            return
+        if self.fabric is None:
+            from repro.core.engine import xor_fold_digest_segments
+            st = live[0]
+            st["roots"] = xor_fold_digest_segments(
+                st["words"], st["starts"] * 4)
+            # per-GROUP merged-buffer digests: groups are word-contiguous
+            # in lane-major order, so one more segmented fold covers all
+            # the stepped path's per-seal update digests
+            st["gdigest"] = xor_fold_digest_segments(
+                st["words"], st["gstart"] * 4)
+            return
+        from repro.kernels.factory import get_kernel
+        fn = get_kernel("shard_seal", self._shard_seal_impl())
+        k_live = len(live)
+        n_words = np.array([st["words"].shape[0] for st in live], np.int64)
+        words2d = np.zeros((k_live, int(n_words.max())), np.uint32)
+        for i, st in enumerate(live):
+            words2d[i, : n_words[i]] = st["words"]
+
+        def fold(key, scale):
+            segs = [np.asarray(st[key], np.int64) * scale for st in live]
+            n_seg = np.array([len(sg) for sg in segs], np.int64)
+            starts2d = np.repeat(n_words[:, None], int(n_seg.max()), 1)
+            for i, sg in enumerate(segs):
+                starts2d[i, : n_seg[i]] = sg
+            out = fn(words2d, starts2d, n_seg, n_words)
+            return [out[i, : n_seg[i]] for i in range(k_live)]
+
+        roots = fold("starts", 4)
+        gdigs = fold("gstart", 4)
+        for i, st in enumerate(live):
+            st["roots"] = roots[i]
+            st["gdigest"] = gdigs[i]
+
+    def _shard_seal_impl(self) -> str:
+        """Map the fabric's mesh knob to a ``shard_seal`` impl: ``"on"``
+        forces the mesh-mapped kernel, ``"off"`` the NumPy mirror, and
+        ``"auto"`` takes the mesh exactly when more than one local device
+        exists (the NumPy mirror otherwise — at CPU lane counts the fold
+        is memory-bound and the mirror wins without a real mesh)."""
+        mode = getattr(self.fabric, "mesh_mode", "off")
+        if mode == "on":
+            return "shard_map"
+        if mode == "off":
+            return "numpy"
+        from repro.launch.mesh import n_local_devices
+        return "shard_map" if n_local_devices() > 1 else "numpy"
+
+    def _lane_preps(self, rollup: VectorRollup,
+                    st: Optional[Dict]) -> List[Optional[_SealPrep]]:
+        """Assemble one lane's per-seal-point ``_SealPrep`` list from its
+        structure + filled digests."""
+        n_groups = sum(1 for e in self._plan if e[0] == "seal")
+        preps: List[Optional[_SealPrep]] = [None] * n_groups
+        if st is None:
+            return preps
+        live, gstart, gsz = st["live"], st["gstart"], st["gsz"]
+        n_txs, now, commit = st["n_txs"], st["now"], st["commit"]
+        nb, first0 = st["nb"], st["first0"]
+        now_p = st["now"][st["post"]]
+        commit_p = st["commit"][st["post"]]
         commit_fn = rollup.fns.id("rollup_commit")
-        lane_b = lane_o[starts]
-        bstart = np.searchsorted(batch_group, np.arange(len(live)))
+        lane_b = st["lane_b"]
+        bstart = np.searchsorted(st["batch_group"], np.arange(len(live)))
         bstop = np.concatenate([bstart[1:], [nb]])
+        t, g, f, s = st["t"], st["g"], st["f"], st["s"]
         for k, i in enumerate(live):
             b0, b1 = int(bstart[k]), int(bstop[k])
             # group k is contiguous both in arrival order (concat) and in
@@ -346,18 +504,20 @@ class FusedWindowLoop:
                 np.zeros(nb_g, np.int32), rollup.fns)
             preps[i] = _SealPrep(
                 TxArrays(t[tsel], g[tsel], f[tsel], s[tsel], rollup.fns),
-                n_txs[b0:b1], now[b0:b1], roots[b0:b1], int(gdigest[k]),
-                arrival_batch[tsel], first0 + b0, rows, commit_batch,
-                inv_post[b0:b1] - b0)
+                n_txs[b0:b1], now[b0:b1], st["roots"][b0:b1],
+                int(st["gdigest"][k]), st["arrival_batch"][tsel],
+                first0 + b0, rows, commit_batch,
+                st["inv_post"][b0:b1] - b0)
         return preps
 
-    def _apply_seal(self, prep: Optional[_SealPrep]) -> None:
-        """Apply one precomputed seal point — the stepped ``seal()``'s
-        bookkeeping, with all the array math already done in bulk."""
-        rollup = self.rollup
+    def _apply_seal(self, prep: Optional[_SealPrep],
+                    rollup: VectorRollup) -> int:
+        """Apply one precomputed seal point to one lane — the stepped
+        ``seal()``'s bookkeeping, with all the array math already done in
+        bulk.  Returns the number of batches sealed (the stepped return)."""
         if prep is None:                       # empty seal: window event
             rollup._emit_window(0)
-            return
+            return 0
         n = len(prep.txs)
         if rollup._state_handlers:
             rollup._apply_state(prep.txs)
@@ -383,6 +543,7 @@ class FusedWindowLoop:
             "first_batch": first, "n_batches": nb, "n_txs": n,
             "digest": rollup.update_digest})
         rollup._emit_window(nb)
+        return nb
 
     # -- deferred block production ---------------------------------------------
     def _pack_blocks(self, times: np.ndarray, n_vis: np.ndarray,

@@ -32,6 +32,12 @@ to ``pump(now)`` window edges, releasing only aggregates whose proofs
 have fully drained.  ``drain(force=True)`` (the face's ``flush``) always
 pushes the remainder through.
 
+The sharded fabric keeps this invariant too: ``ShardedRollup`` gives
+every shard lane its own face but ONE shared pipeline, and the fused
+window loop (core/fused.py) enqueues each window's jobs lane-by-lane in
+shard order, so a fused fabric drains the exact proof/aggregate stream
+the stepped fabric does — one pipeline across fused shard lanes.
+
 Security caveat: session and aggregate digests are validity stand-ins
 for recursive SNARK composition, not zk proofs — see core/rollup.py.
 """

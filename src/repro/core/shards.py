@@ -44,6 +44,7 @@ import numpy as np
 from repro.core.engine import FnRegistry, TxArrays, VectorRollup
 from repro.core.events import EventLog, WindowSettled
 from repro.core.gas import DEFAULT_GAS, ROLLUP_BATCH, GasTable
+from repro.core.interconnect import InterconnectSpec
 from repro.core.ledger import EventHooks
 from repro.core.prover import ProverPipeline
 from repro.core.state import StateArrays, account_owner
@@ -61,10 +62,13 @@ class ShardedRollup(EventHooks):
     """K-shard L2 fabric over one shared L1 (LedgerBackend face)."""
 
     soa_native = True
-    # the fabric seals per shard with cross-shard routing state between
-    # windows — core/fused.py cannot replay that as one plan yet, so
-    # Scheduler(fused="auto") keeps the Python-stepped path here
-    fused_capable = False
+    # the fused loop replays the fabric as one plan: routing decisions
+    # (hash split / least-loaded argmin / task pins) are taken at RECORD
+    # time against the live ``_submitted`` counters, and execute() seals
+    # the K lanes per window in shard order before ``_finish_window`` —
+    # bit-identical to the stepped path, so Scheduler(fused="auto")
+    # takes the fused loop here too
+    fused_capable = True
 
     def __init__(self, l1, n_shards: int = 1,
                  batch_size: int = ROLLUP_BATCH,
@@ -74,9 +78,12 @@ class ShardedRollup(EventHooks):
                  route: str = "hash",
                  state: Optional[StateArrays] = None,
                  agg_width: int = 1, prover_capacity: int = 1,
-                 finalize: str = "eager"):
+                 finalize: str = "eager",
+                 interconnect: Optional[InterconnectSpec] = None,
+                 mesh: str = "auto"):
         assert n_shards >= 1
         assert route in ("hash", "least_loaded"), route
+        assert mesh in ("auto", "on", "off"), mesh
         self.l1 = l1
         self.n_shards = n_shards
         self.route = route
@@ -113,6 +120,15 @@ class ShardedRollup(EventHooks):
         self._submitted = np.zeros(n_shards, np.int64)
         self.fabric_roots: List[Dict[str, Any]] = []
         self._window = 0
+        # explicit wire-cost model (core/interconnect.py): a parallel,
+        # deterministic ledger of what crossing the fabric would cost —
+        # it NEVER feeds the Table-II latency()/throughput() numbers
+        self.interconnect = (interconnect if interconnect is not None
+                             else InterconnectSpec()).build(n_shards)
+        # "auto"/"on"/"off": whether the fused loop folds the K lanes'
+        # seal digests through the mesh-mapped shard_seal kernel
+        # (kernels/shard_lanes.py) instead of the host-local impls
+        self.mesh_mode = mesh
         self._init_events()
 
     # -- events (NodeClient subscription hook) ---------------------------------
@@ -171,10 +187,14 @@ class ShardedRollup(EventHooks):
         if shard is not None or self.n_shards == 1:
             k = int(shard or 0)
             self._submitted[k] += n
+            pinned = np.zeros(self.n_shards, np.int64)
+            pinned[k] = n
+            self._wire_submit(pinned)
             lo, hi = self.shards[k].submit_arrays(batch)
             return (np.full(n, k, np.int64),
                     np.arange(lo, hi, dtype=np.int64))
         lanes = _hash_route(batch.sender_id, self.n_shards)
+        self._wire_submit(np.bincount(lanes, minlength=self.n_shards))
         seq_of = np.empty(n, np.int64)
         for k in range(self.n_shards):
             m = lanes == k
@@ -185,6 +205,13 @@ class ShardedRollup(EventHooks):
                     batch.sender_id[m], self.fns))
                 seq_of[m] = np.arange(lo, hi, dtype=np.int64)
         return lanes.astype(np.int64), seq_of
+
+    def _wire_submit(self, counts) -> None:
+        """Account the cohort->shard wire cost of one routed submission
+        (``counts`` = txs per destination shard).  Called at ROUTING time
+        on both the stepped and the fused path, so the wire logs match."""
+        if int(np.sum(counts)):
+            self.interconnect.record_submit(counts)
 
     # -- task-level routing (protocol layer) -----------------------------------
     def assign_task(self, task_id: str) -> int:
@@ -208,7 +235,16 @@ class ShardedRollup(EventHooks):
         Window-boundary contract (fl/scheduler.py): after all shards seal,
         the K partition roots are merged into one fabric root — the
         cross-shard commitment for this window."""
-        nb = sum(s.seal() for s in self.shards)
+        return self._finish_window([s.seal() for s in self.shards])
+
+    def _finish_window(self, shard_batches: List[int]) -> int:
+        """Merge one window after every shard sealed: account the
+        root-gather wire cost, record the fabric root and emit the
+        ``WindowSettled`` event.  The fused loop (core/fused.py) calls
+        this directly after applying the K precomputed lane seals —
+        same record, same event, same window counter."""
+        nb = int(sum(shard_batches))
+        self.interconnect.record_root_gather(self._window, shard_batches)
         record: Dict[str, Any] = {"n_batches": nb}
         if self.state is not None:
             record = self._root_record(nb)

@@ -23,6 +23,7 @@ block/window timing.
 """
 from __future__ import annotations
 
+import logging
 from typing import Dict, List, Optional
 
 import jax
@@ -33,6 +34,12 @@ from repro.core.aggregation import (tree_flat, tree_flat_stacked,
 from repro.core.oracle import evaluate_quorum
 from repro.core.reputation import model_distances
 from repro.fl.cohort import AgentCohort, CohortSubmissions
+
+_log = logging.getLogger(__name__)
+# (chain type, rollup type) pairs already warned about falling back to
+# the stepped path under fused="auto" — the log fires once per stack
+# shape per process, not once per run (tests reset this set directly)
+_FUSED_FALLBACK_WARNED: set = set()
 
 
 @jax.jit
@@ -293,6 +300,17 @@ class Scheduler:
         from repro.core.fused import FusedWindowLoop, supports_fused
         use_fused = (supports_fused(node.chain, node.rollup)
                      if self.fused == "auto" else bool(self.fused))
+        if self.fused == "auto" and not use_fused:
+            # the fallback used to be silent; say it once per stack shape
+            # (NodeClient.capabilities() surfaces the chosen path too)
+            key = (type(node.chain).__name__,
+                   type(node.rollup).__name__
+                   if node.rollup is not None else None)
+            if key not in _FUSED_FALLBACK_WARNED:
+                _FUSED_FALLBACK_WARNED.add(key)
+                _log.info(
+                    "Scheduler(fused='auto'): %s/%s is not fused-capable; "
+                    "using the Python-stepped window loop", *key)
         if use_fused:
             self._loop = FusedWindowLoop(node.chain, node.rollup)
             node._fused = self._loop

@@ -201,6 +201,12 @@ class AutoDFL:
         balances = [self.escrow.balances.get(t, 0.0)
                     for t in self.trainer_ids]
         stake = [locked.get(t, 0.0) for t in self.trainer_ids]
+        # the scattered rows span every shard partition: account their
+        # wire cost NOW (routing/record time — identical on the stepped
+        # and fused paths) against the fabric's interconnect model
+        ic = getattr(target, "interconnect", None)
+        if ic is not None and len(ids):
+            ic.record_settle_scatter(len(ids))
         if self._fused is not None:
             # window roots commit this scatter — journal it so the fused
             # replay applies it between the same seal points
@@ -242,7 +248,9 @@ class AutoDFL:
                              np.full(n, fid, np.int32), sender_ids,
                              target.fns)
             if self._fused is not None and self._fused.covers(target):
-                self._fused.submit(target, batch)
+                # the shard pin rides into the journaled plan — the fused
+                # loop replays task-pinned routing at record time
+                self._fused.submit(target, batch, shard=self._route_shard)
             elif self._route_shard is not None and hasattr(target, "shards"):
                 # task-pinned shard routing (core/shards.py fabric)
                 target.submit_arrays(batch, shard=self._route_shard)

@@ -71,6 +71,17 @@ def _load() -> None:
     register_kernel("batch_seal", "pallas", bs.batch_seal_pallas,
                     tpu_default=True)
 
+    # K-lane segmented seal digests (core/fused.py over the sharded
+    # fabric: every lane's per-batch roots / per-window update digests
+    # fold in one call; "shard_map" runs the lanes over the 1-D "shard"
+    # device mesh)
+    from repro.kernels import shard_lanes as sl
+    register_kernel("shard_seal", "numpy", sl.shard_seal_np,
+                    cpu_default=True)
+    register_kernel("shard_seal", "jax", sl.shard_seal_jax,
+                    tpu_default=True)
+    register_kernel("shard_seal", "shard_map", sl.shard_seal_shard_map)
+
     # merged update-buffer digest (seal commitment; scalar u32 out)
     def _digest_np(words):
         from repro.core.engine import xor_fold_digest

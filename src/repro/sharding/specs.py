@@ -3,6 +3,7 @@
 Axis conventions (launch/mesh.py):
   single-pod : (16, 16)      -> ("data", "model")
   multi-pod  : (2, 16, 16)   -> ("pod", "data", "model")
+  ledger     : (K,)          -> ("shard",)   [make_shard_mesh]
 
 Policies:
   DP    batch over ("pod","data")        (FL trainers = data-axis groups)
@@ -18,6 +19,24 @@ from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+#: the ledger fabric's 1-D mesh axis (launch/mesh.make_shard_mesh): K
+#: shard lanes as rows, one contiguous row block per device
+SHARD_LANE_AXIS = "shard"
+
+
+def shard_lane_spec() -> P:
+    """Partition spec for ``(K, W)`` shard-lane SoA buffers
+    (kernels/shard_lanes.py): lane rows over the ``"shard"`` axis, the
+    per-lane word/segment dim replicated — each device folds its own
+    lanes with no cross-device collectives."""
+    return P(SHARD_LANE_AXIS, None)
+
+
+def shard_lane_sharding(mesh) -> NamedSharding:
+    """NamedSharding form of ``shard_lane_spec`` for donated buffers."""
+    return NamedSharding(mesh, shard_lane_spec())
 
 
 class MeshCtx:

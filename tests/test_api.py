@@ -221,7 +221,9 @@ def test_chain_only_nodes_emit_block_events_and_report_capabilities():
     what the backend supports, and only unsupported callback hooks
     raise."""
     bare = NodeClient.from_spec(NodeSpec(rollup=None))
-    assert bare.capabilities() == frozenset({"block_packed"})
+    # vector chain-only: block production + the fused-loop path marker
+    assert bare.capabilities() == frozenset({"block_packed",
+                                             "fused_window_loop"})
     full = NodeClient.from_spec(NodeSpec())
     assert "aggregate_verified" in full.capabilities()
     assert "block_packed" in full.capabilities()

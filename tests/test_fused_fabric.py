@@ -1,0 +1,364 @@
+"""Fused shard-parallel fabric (core/fused.py x core/shards.py).
+
+The fused window loop runs a ``ShardedRollup`` as K shard lanes: routing
+at record time, per-lane seal precompute, one batched ``shard_seal``
+digest fold, every window closed through ``_finish_window``.  Pinned
+here — a fused fabric run is bit-identical to the stepped fabric:
+
+  * typed event streams, blocks, confirm times, L1 gas;
+  * fabric gas logs, digests, fabric roots, flat state root;
+  * per-shard provenance (commit/settle refs, prov batches, seq counters)
+    and the per-tx ``(shard, seq)`` receipts ``submit`` returns;
+  * the interconnect wire log per kind (the fused loop defers window
+    merges to ``execute()``, so only the interleaving may differ);
+
+across shard counts x routing policy x seal cadence x random traffic
+(hypothesis), plus: the one-shard fused fabric vs a plain VectorRollup,
+the mesh-mapped ``shard_seal`` path (``mesh="on"``), a full Scheduler
+end-to-end run, the ``fused="auto"`` fallback log, and the
+``capabilities()`` path marker.
+"""
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st  # noqa: F401
+
+from repro.core.engine import FnRegistry, TxArrays, VectorChain, VectorRollup
+from repro.core.fused import FusedWindowLoop, supports_fused
+from repro.core.shards import ShardedRollup
+from repro.core.state import default_state_handlers
+
+BEHAVIORS = ["good", "good", "malicious", "lazy"]
+
+
+def _build_fabric(k, route="hash", mesh="off"):
+    chain = VectorChain()
+    fabric = ShardedRollup(chain, n_shards=k, batch_size=4, n_lanes=2,
+                           agg_width=4, prover_capacity=2, route=route,
+                           mesh=mesh)
+    for fn, handler in default_state_handlers().items():
+        fabric.register_state(fn, handler)
+    return chain, fabric
+
+
+def _fabric_traffic(rng, n_windows, n_tasks, fns, pin_tasks, n_shards,
+                    max_txs=6):
+    """Windows of (batch, shard-pin) pairs; even tasks pin to a random
+    shard when ``pin_tasks`` (the protocol's task-level routing), odd
+    tasks route by policy."""
+    for f in ("publishTask", "submitLocalModel", "calculateObjectiveRep",
+              "updateReputation"):
+        fns.id(f)
+    out, t = [], 0.0
+    for _w in range(n_windows):
+        row = []
+        for m in range(n_tasks):
+            k = int(rng.integers(1, max_txs + 1))
+            times = t + 0.01 * np.arange(1, k + 1)
+            t = float(times[-1])
+            pin = int(rng.integers(0, n_shards)) \
+                if pin_tasks and m % 2 == 0 else None
+            row.append((TxArrays(
+                times, rng.integers(21_000, 60_000, k).astype(np.int64),
+                rng.integers(0, 4, k).astype(np.int32),
+                rng.integers(0, 64, k).astype(np.int32), fns), pin))
+        out.append(row)
+    return out
+
+
+def _drive(chain, fabric, loop, traffic, seal_every):
+    """One window schedule, stepped (loop=None) or fused; returns the
+    per-submission (shard_of, seq_of) provenance."""
+    face = loop if loop is not None else fabric
+    prov, t = [], 0.0
+    for w, row in enumerate(traffic):
+        for batch, pin in row:
+            prov.append(face.submit(fabric, batch, shard=pin)
+                        if loop is not None
+                        else fabric.submit_arrays(batch, shard=pin))
+        if seal_every and (w + 1) % seal_every == 0:
+            face.seal()
+        t_end = max(t + 1.0, float(row[-1][0].submit_time[-1]))
+        face.pump(t_end)
+        (loop if loop is not None else chain).run_until(t_end)
+        t = t_end
+    face.flush()
+    (loop if loop is not None else chain).run_until(t + 3.0)
+    if loop is not None:
+        loop.execute()
+    return prov
+
+
+def _wire_by_kind(ic):
+    out = {}
+    for r in ic.log:
+        out.setdefault(r["kind"], []).append(r)
+    return out
+
+
+def _assert_fabrics_equal(ca, fa, cb, fb):
+    ea, eb = ca.events._events, cb.events._events
+    assert len(ea) == len(eb), (len(ea), len(eb))
+    for x, y in zip(ea, eb):
+        assert x == y, f"\nstepped {x}\nfused   {y}"
+    assert ca.total_gas == cb.total_gas
+    assert ca.blocks == cb.blocks
+    np.testing.assert_array_equal(ca.confirm_times(), cb.confirm_times())
+    assert fa.gas_log == fb.gas_log
+    assert fa.batch_digests == fb.batch_digests
+    assert fa.update_digest == fb.update_digest
+    assert fa.state_root() == fb.state_root()
+    assert fa.fabric_root() == fb.fabric_root()
+    assert fa.fabric_roots == fb.fabric_roots
+    np.testing.assert_array_equal(fa._submitted, fb._submitted)
+    for sa, sb in zip(fa.shards, fb.shards):
+        assert sa.batch_commit_ref == sb.batch_commit_ref
+        assert sa.batch_settle_ref == sb.batch_settle_ref
+        assert sa._prov_starts == sb._prov_starts
+        for x, y in zip(sa._prov_batches, sb._prov_batches):
+            np.testing.assert_array_equal(x, y)
+        assert (sa.n_batches, sa._next_seq, sa._sealed_seq) == \
+            (sb.n_batches, sb._next_seq, sb._sealed_seq)
+    # wire logs match per kind and in total; only the interleaving may
+    # differ (the fused loop defers window merges to execute())
+    assert _wire_by_kind(fa.interconnect) == _wire_by_kind(fb.interconnect)
+    assert fa.interconnect.summary() == fb.interconnect.summary()
+
+
+def _assert_provenance_equal(pa, pb):
+    for (sa, qa), (sb, qb) in zip(pa, pb):
+        np.testing.assert_array_equal(sa, sb)
+        np.testing.assert_array_equal(qa, qb)
+
+
+# -- pinned: fused fabric == stepped fabric ------------------------------------
+@pytest.mark.parametrize("route", ["hash", "least_loaded"])
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_fused_fabric_bit_identical(k, route):
+    fns = FnRegistry()
+    traffic = _fabric_traffic(np.random.default_rng(42 + k), 5, 3, fns,
+                              pin_tasks=True, n_shards=k)
+    ca, fa = _build_fabric(k, route)
+    pa = _drive(ca, fa, None, traffic, seal_every=2)
+    cb, fb = _build_fabric(k, route)
+    pb = _drive(cb, fb, FusedWindowLoop(cb, fb), traffic, seal_every=2)
+    _assert_provenance_equal(pa, pb)
+    _assert_fabrics_equal(ca, fa, cb, fb)
+
+
+def test_fused_fabric_mesh_on_bit_identical():
+    """mesh="on" routes the digest fold through the shard_map kernel —
+    still bit-identical to the stepped fabric (mesh is a pure
+    performance knob)."""
+    fns = FnRegistry()
+    traffic = _fabric_traffic(np.random.default_rng(77), 4, 3, fns,
+                              pin_tasks=True, n_shards=4)
+    ca, fa = _build_fabric(4, "hash", mesh="off")
+    _drive(ca, fa, None, traffic, seal_every=2)
+    cb, fb = _build_fabric(4, "hash", mesh="on")
+    loop = FusedWindowLoop(cb, fb)
+    assert loop._shard_seal_impl() == "shard_map"
+    _drive(cb, fb, loop, traffic, seal_every=2)
+    _assert_fabrics_equal(ca, fa, cb, fb)
+
+
+def test_mesh_mode_selects_shard_seal_impl():
+    from repro.launch.mesh import n_local_devices
+    for mode, want in [("on", "shard_map"), ("off", "numpy"),
+                       ("auto", "shard_map" if n_local_devices() > 1
+                        else "numpy")]:
+        chain, fabric = _build_fabric(2, mesh=mode)
+        assert FusedWindowLoop(chain, fabric)._shard_seal_impl() == want
+
+
+def test_one_shard_fused_fabric_matches_vector_rollup():
+    """n_shards=1 through the fused loop == a plain stepped VectorRollup
+    (the fabric's one-lane degenerate case, modulo the shard tag)."""
+    fns = FnRegistry()
+    traffic = _fabric_traffic(np.random.default_rng(7), 4, 2, fns,
+                              pin_tasks=False, n_shards=1)
+    chain_a = VectorChain()
+    ru = VectorRollup(chain_a, batch_size=4, n_lanes=2, agg_width=4,
+                      prover_capacity=2)
+    for fn, handler in default_state_handlers().items():
+        ru.register_state(fn, handler)
+    t = 0.0
+    for w, row in enumerate(traffic):
+        for batch, _ in row:
+            ru.submit_arrays(batch)
+        if (w + 1) % 2 == 0:
+            ru.seal()
+        t_end = max(t + 1.0, float(row[-1][0].submit_time[-1]))
+        ru.pump(t_end)
+        chain_a.run_until(t_end)
+        t = t_end
+    ru.flush()
+    chain_a.run_until(t + 3.0)
+
+    cb, fb = _build_fabric(1, "hash")
+    _drive(cb, fb, FusedWindowLoop(cb, fb), traffic, seal_every=2)
+    assert [{k: v for k, v in r.items() if k != "shard"}
+            for r in fb.gas_log] == ru.gas_log
+    assert fb.batch_digests == ru.batch_digests
+    assert fb.update_digest == ru.update_digest
+    assert fb.shards[0].batch_commit_ref == ru.batch_commit_ref
+    assert fb.state_root() == ru.state_arrays.root()
+
+
+# -- property: shard counts x routing x cadence x random traffic ---------------
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from(["hash", "least_loaded"]),
+       st.sampled_from([0, 1, 2, 3]), st.booleans())
+def test_fused_fabric_property(seed, n_shards, route, seal_every,
+                               pin_tasks):
+    rng = np.random.default_rng(seed)
+    fns = FnRegistry()
+    traffic = _fabric_traffic(rng, int(rng.integers(2, 6)),
+                              int(rng.integers(1, 4)), fns,
+                              pin_tasks=pin_tasks, n_shards=n_shards)
+    ca, fa = _build_fabric(n_shards, route)
+    pa = _drive(ca, fa, None, traffic, seal_every)
+    cb, fb = _build_fabric(n_shards, route)
+    pb = _drive(cb, fb, FusedWindowLoop(cb, fb), traffic, seal_every)
+    _assert_provenance_equal(pa, pb)
+    _assert_fabrics_equal(ca, fa, cb, fb)
+
+
+# -- FL end-to-end: Scheduler over a fabric node -------------------------------
+@pytest.fixture(scope="module")
+def tiny_world():
+    from repro.data.synthetic import gaussian_clusters
+    from repro.fl.cohort import CohortKernels
+    from repro.fl.dp import DPConfig
+    from repro.models.mlp import TinyMLP
+    from repro.optim.optimizers import OptimizerSpec, make_optimizer
+    model = TinyMLP(32, 16, 10)
+    opt = make_optimizer(OptimizerSpec(name="sgdm", lr=0.1, grad_clip=5.0))
+    tr_x, tr_y = gaussian_clusters(1024, 32, 10, seed=1, noise=0.5)
+    vx, vy = gaussian_clusters(100, 32, 10, seed=2, noise=0.5)
+    val = {"x": jnp.asarray(vx), "labels": jnp.asarray(vy)}
+
+    def bf(c, r):
+        g = np.random.default_rng((c * 9973 + r) % 2 ** 31)
+        idx = g.integers(0, len(tr_x), 8)
+        return {"x": jnp.asarray(tr_x[idx]),
+                "labels": jnp.asarray(tr_y[idx])}
+
+    kern = CohortKernels(model, opt, DPConfig(noise_multiplier=0.05))
+    return model, opt, val, bf, model.accuracy_fn(), kern
+
+
+def _run_fabric_schedule(world, fused, n_shards=2, route="hash"):
+    from repro.api.specs import ChainSpec, NodeSpec, ShardSpec
+    from repro.fl.cohort import VectorCohort, batched_batch_fn
+    from repro.fl.dp import DPConfig
+    from repro.fl.scheduler import Scheduler
+    from repro.fl.server import AutoDFL
+    model, opt, val, bf, eval_fn, kern = world
+    spec = NodeSpec(chain=ChainSpec(backend="vector"),
+                    shards=ShardSpec(count=n_shards, fabric=True,
+                                     route=route, mesh="off"),
+                    trainer_funds=50.0)
+    node = AutoDFL(model, opt, len(BEHAVIORS), eval_fn, val, spec=spec)
+    sch = Scheduler(node, seal_every=2, fused=fused)
+    for i in range(2):
+        cohort = VectorCohort(model, opt, batched_batch_fn(bf, 2),
+                              node.store, behaviors=BEHAVIORS,
+                              local_steps=2,
+                              dp=DPConfig(noise_multiplier=0.05), seed=i,
+                              kernels=kern)
+        sch.add_task(f"task{i}", cohort, rounds=2, start_window=i % 2)
+    res = sch.run()
+    return node, sch, res
+
+
+def test_fused_fabric_scheduler_end_to_end(tiny_world, monkeypatch):
+    """Full protocol runs (fused='auto' engages the loop on the fabric)
+    match the stepped runs: ledgers, fabric roots, results, records."""
+    executed = []
+    orig = FusedWindowLoop.execute
+    monkeypatch.setattr(
+        FusedWindowLoop, "execute",
+        lambda self: (executed.append(type(self.rollup).__name__),
+                      orig(self))[1])
+    na, sa, ra = _run_fabric_schedule(tiny_world, fused=False)
+    assert executed == []
+    nb, sb, rb = _run_fabric_schedule(tiny_world, fused="auto")
+    assert executed == ["ShardedRollup"]
+    _assert_fabrics_equal(na.chain, na.rollup, nb.chain, nb.rollup)
+    assert na.state_arrays.root() == nb.state_arrays.root()
+    for t in ra:
+        np.testing.assert_array_equal(ra[t].scores, rb[t].scores)
+        np.testing.assert_array_equal(ra[t].reputations,
+                                      rb[t].reputations)
+        assert ra[t].payouts == rb[t].payouts
+    assert [repr(w) for w in sa.window_records] == \
+        [repr(w) for w in sb.window_records]
+    assert [repr(s) for s in sa.settlement_records] == \
+        [repr(s) for s in sb.settlement_records]
+
+
+# -- fused="auto" fallback: one-time log + capability marker -------------------
+def test_fused_auto_fallback_logs_once(tiny_world, caplog):
+    import repro.fl.scheduler as sched_mod
+    from repro.api.specs import ChainSpec, NodeSpec
+    from repro.fl.client import ClientConfig, TrainingAgent
+    from repro.fl.dp import DPConfig
+    from repro.fl.scheduler import Scheduler
+    from repro.fl.server import AutoDFL
+    model, opt, val, bf, eval_fn, kern = tiny_world
+    obj = AutoDFL(model, opt, len(BEHAVIORS), eval_fn, val,
+                  spec=NodeSpec(chain=ChainSpec(backend="object"),
+                                trainer_funds=50.0))
+    assert not supports_fused(obj.chain, obj.rollup)
+
+    def agents(seed0):
+        return [TrainingAgent(
+            ClientConfig(f"trainer{i}", BEHAVIORS[i], local_steps=2,
+                         dp=DPConfig(noise_multiplier=0.05)),
+            model, opt, obj.store, bf, seed=seed0 + i)
+            for i in range(len(BEHAVIORS))]
+
+    sched_mod._FUSED_FALLBACK_WARNED.clear()
+    with caplog.at_level(logging.INFO, logger="repro.fl.scheduler"):
+        sch = Scheduler(obj, seal_every=2)
+        sch.add_task("t0", agents(0), rounds=2)
+        sch.run()
+        assert sch._loop is None
+        # a second run on the same stack shape stays silent
+        sch2 = Scheduler(obj, seal_every=2)
+        sch2.add_task("t1", agents(10), rounds=1)
+        sch2.run()
+    msgs = [r for r in caplog.records if "not fused-capable" in r.message]
+    assert len(msgs) == 1
+    assert "Chain/Rollup" in msgs[0].getMessage()
+
+
+def test_fused_auto_engaged_stays_silent(tiny_world, caplog):
+    import repro.fl.scheduler as sched_mod
+    sched_mod._FUSED_FALLBACK_WARNED.clear()
+    with caplog.at_level(logging.INFO, logger="repro.fl.scheduler"):
+        node, _, _ = _run_fabric_schedule(tiny_world, fused="auto")
+    assert supports_fused(node.chain, node.rollup)
+    assert not [r for r in caplog.records
+                if "not fused-capable" in r.message]
+
+
+def test_capabilities_surface_fused_path():
+    from repro.api import NodeClient
+    from repro.api.specs import ChainSpec, NodeSpec, ShardSpec
+    fab = NodeClient.from_spec(NodeSpec(
+        chain=ChainSpec(backend="vector"),
+        shards=ShardSpec(count=2, fabric=True)))
+    assert "fused_window_loop" in fab.capabilities()
+    vec = NodeClient.from_spec(NodeSpec(chain=ChainSpec(backend="vector")))
+    assert "fused_window_loop" in vec.capabilities()
+    obj = NodeClient.from_spec(NodeSpec(chain=ChainSpec(backend="object")))
+    assert "fused_window_loop" not in obj.capabilities()
