@@ -13,8 +13,13 @@ Methodology (recorded so BENCH_protocol.json entries stay comparable):
   * Sequential baseline: ``AutoDFL.run_task`` per task — per-trainer
     TrainingAgent Python loop, object engine (the paper-faithful harness).
   * Scheduler: ``fl/scheduler.Scheduler`` interleaving all tasks with
-    VectorCohorts (one vmapped dispatch per cohort round) over the vector
-    engine, rollup lane batches sealed every 2 windows.
+    VectorCohorts over the vector engine, rollup lane batches sealed every
+    2 windows.  With ``megabatch="auto"`` (the default, measured here) an
+    all-round window runs as ONE (tasks, trainers) double-vmapped
+    train/score/aggregate megastep plus one megabatched tx emission; the
+    per-task path is re-measured at the assert point (``mega_reference``)
+    and both are pinned bit-identical (state roots via the incremental
+    dirty-chunk commitment, gas logs, events, scores) before any timing.
   * Both paths run a full jit warmup at the measured shapes first; the
     timed region is publish -> rounds -> settle for ALL tasks, end to end.
   * TPS = protocol txs emitted / wall seconds.  Gas: L1-equivalent total
@@ -33,6 +38,19 @@ tasks x 64 trainers sustains >= 10x the protocol throughput of sequential
 ``run_task`` calls over the same work.  Quick mode (CI smoke) asserts the
 8-task x 32-trainer point against a reduced >= 3x floor (timer noise on
 shared runners; the measured ratio is recorded either way).
+
+Megastep acceptance: ``mega_speedup`` (auto vs megabatch=False at the
+assert point) is floored at 0.6x — a parity band, not a speedup claim.
+The megastep's win is structural: ~96 per-task jit dispatches per window
+collapse into ~6 (one (tasks, trainers) vmapped train step, one
+triple-vmapped score table, one vmapped weighted aggregation) plus ONE
+megabatched tx emission per window.  On a single-core CPU host those
+fused programs execute the same FLOPs serially, so wall-clock lands at
+~1.1x (8x32) to ~0.8x (32x64); the multiplicative gain needs a backend
+with parallel lanes (the vmapped task axis maps onto accelerator cores).
+Bit-exactness against the per-task path is asserted before timing, and
+``fl_per_task_flatness`` guards against collapse beyond the
+serial-compute 1/T bound.
 
 Fused window-loop acceptance: at the largest task count the fused loop
 must be >= 1.2x the stepped wall (quick: >= 1.0x; measured ~1.4-2.1x on
@@ -59,6 +77,7 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -133,7 +152,7 @@ def _run_sequential(world, n_tasks: int, n_trainers: int) -> Dict:
 
 
 def _run_scheduler(world, n_tasks: int, n_trainers: int,
-                   kernels: CohortKernels) -> Dict:
+                   kernels: CohortKernels, megabatch="auto") -> Dict:
     model, opt, val, eval_fn, dp, _, vbf = world
 
     def build():
@@ -141,7 +160,7 @@ def _run_scheduler(world, n_tasks: int, n_trainers: int,
                       trainer_funds=10.0 * (n_tasks + 2),
                       publisher_funds=100.0 * (n_tasks + 2))
         node = AutoDFL(model, opt, n_trainers, eval_fn, val, spec=spec)
-        sch = Scheduler(node, seal_every=2)
+        sch = Scheduler(node, seal_every=2, megabatch=megabatch)
         return node, sch
 
     # jit warmup at the measured shapes (incl. the K-task fused settlement
@@ -168,9 +187,53 @@ def _run_scheduler(world, n_tasks: int, n_trainers: int,
     l1_equiv = _l1_equivalent(node.protocol_calls)
     l2 = sum(r["total"] for r in node.rollup.gas_log)
     return {"wall_s": round(wall, 4), "protocol_txs": n_txs,
-            "tps": round(n_txs / wall, 1), "task0_val_acc": round(acc, 3),
+            "tps": round(n_txs / wall, 1),
+            "per_task_tps": round(n_txs / wall / n_tasks, 1),
+            "mega_windows": sch.mega_windows,
+            "task0_val_acc": round(acc, 3),
             "l1_equivalent_gas": int(l1_equiv), "l2_gas": int(l2),
             "gas_reduction": round(l1_equiv / l2, 1)}
+
+
+def _assert_mega_equivalent(world, kernels: CohortKernels) -> Dict:
+    """Equivalence gate BEFORE any timing is trusted: a small multi-task
+    run driven by the cross-task megastep must be BIT-IDENTICAL to the
+    per-task reference path (state roots via the incremental dirty-chunk
+    commitment vs a cold full refold, gas logs, typed events, quorum
+    scores, global params)."""
+    model, opt, val, eval_fn, dp, _, vbf = world
+
+    def once(megabatch):
+        spec = preset("protocol-scheduler", trainer_funds=50.0,
+                      publisher_funds=500.0)
+        node = AutoDFL(model, opt, 16, eval_fn, val, spec=spec)
+        sch = Scheduler(node, seal_every=2, megabatch=megabatch)
+        for t in range(3):
+            sch.add_task(FLTaskSpec(f"eq{t}", rounds=2), VectorCohort(
+                model, opt, vbf, node.store, n_trainers=16,
+                local_steps=LOCAL_STEPS, dp=dp, seed=t, kernels=kernels))
+        out = sch.run()
+        return node, sch, out
+
+    na, sa, oa = once(False)
+    nb, sb, ob = once("auto")
+    assert sa.mega_windows == 0 and sb.mega_windows > 0
+    # incremental dirty-chunk roots == full refold on an untracked copy
+    for n in (na, nb):
+        arrs = n.rollup.state_arrays
+        assert arrs.root() == arrs.copy().root()
+    assert na.chain.state_root() == nb.chain.state_root()
+    assert na.rollup.state_root() == nb.rollup.state_root()
+    assert na.chain.total_gas == nb.chain.total_gas
+    assert na.rollup.gas_log == nb.rollup.gas_log
+    assert na.protocol_calls == nb.protocol_calls
+    assert na.chain.events._events == nb.chain.events._events
+    for tid in oa:
+        np.testing.assert_array_equal(oa[tid].scores, ob[tid].scores)
+        for la, lb in zip(jax.tree.leaves(oa[tid].global_params),
+                          jax.tree.leaves(ob[tid].global_params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    return {"tasks": 3, "trainers": 16, "rounds": 2, "pinned": True}
 
 
 # -- fused window loop: stepped vs plan-then-execute on the raw ledger ---------
@@ -275,6 +338,9 @@ def run(quick: bool = False) -> Dict:
     world = _protocol_world()
     model, opt = world[0], world[1]
     kernels = CohortKernels(model, opt, world[4])
+    # gate first: the megastep + incremental-commitment paths must be
+    # bit-exact to the stepped references before their timings mean a thing
+    mega_equiv = _assert_mega_equivalent(world, kernels)
     assert_tasks, assert_trainers = (8, 32) if quick else (16, 64)
     sweep = ([(1, 16), (4, 32), (8, 32)] if quick else
              [(1, 32), (4, 32), (8, 32), (8, 64), (16, 64), (32, 64)])
@@ -290,6 +356,42 @@ def run(quick: bool = False) -> Dict:
     assert speedup >= floor, (
         f"scheduler with {assert_tasks} concurrent tasks must be >= "
         f"{floor}x sequential run_task throughput, got {speedup:.1f}x")
+    # megastep speedup at the assert point: same shape, per-task reference
+    # path (its own warmup — the mega warm run compiles different programs)
+    ref = _run_scheduler(world, assert_tasks, assert_trainers, kernels,
+                         megabatch=False)
+    mega_speedup = sch["tps"] / max(ref["tps"], 1e-9)
+    # Floor encodes "parity band with the per-task path", not the headline
+    # speedup: the megastep trades T separate jit dispatches per window for
+    # one vmapped program, which only pays off when the backend can run the
+    # task lanes in parallel.  On a single-core CPU host (this container's
+    # CI runner) the fused program does identical FLOPs serially, so the
+    # honest expectation is ~1x at small shapes and a mild vmap penalty at
+    # the largest ones; the dispatch-count and batched-emission wins are
+    # asserted structurally via mega_windows + the equivalence gate above.
+    mega_floor = 0.6
+    assert mega_speedup >= mega_floor, (
+        f"megabatched scheduler at {assert_tasks}x{assert_trainers} must "
+        f"be >= {mega_floor}x the per-task path, got {mega_speedup:.2f}x")
+    assert sch["mega_windows"] > 0 and ref["mega_windows"] == 0, (
+        "assert-point runs must exercise the megastep (auto) and the "
+        "per-task reference (megabatch=False) respectively")
+    # per-task TPS flatness: megabatching is the scaling story — doubling
+    # the task count must not collapse per-task throughput
+    flat_num, flat_den = ((8, 32), (4, 32)) if quick else ((32, 64),
+                                                           (16, 64))
+    fl_flat = (grid[f"tasks={flat_num[0]},trainers={flat_num[1]}"]
+               ["per_task_tps"] /
+               grid[f"tasks={flat_den[0]},trainers={flat_den[1]}"]
+               ["per_task_tps"])
+    # single-core bound again: per-task TPS at T tasks approaches 1/T of
+    # the 1-task value once the host is compute-saturated, so the floor
+    # asserts "no collapse beyond the serial-compute bound", not the
+    # accelerator-parallel flatness the megastep is designed for
+    fl_flat_floor = 0.35 if quick else 0.4
+    assert fl_flat >= fl_flat_floor, (
+        f"per-task TPS at {flat_num[0]} tasks fell to {fl_flat:.2f}x the "
+        f"{flat_den[0]}-task value (floor {fl_flat_floor})")
     window_loop = _run_window_loop(quick)
     return {"quick": quick, "rounds": ROUNDS, "local_steps": LOCAL_STEPS,
             "batch": BATCH, "data_seeds": {"train": 1, "val": 2},
@@ -297,7 +399,26 @@ def run(quick: bool = False) -> Dict:
                              "n_trainers": assert_trainers},
             "sequential": seq, "scheduler_grid": grid,
             "speedup": round(speedup, 1), "speedup_floor": floor,
+            "mega_equivalence": mega_equiv,
+            "mega_reference": ref,
+            "mega_speedup": round(mega_speedup, 2),
+            "mega_speedup_floor": mega_floor,
+            "fl_per_task_flatness": round(fl_flat, 3),
+            "fl_per_task_flatness_floor": fl_flat_floor,
             "window_loop": window_loop,
+            "baseline_pr7": {
+                "revision": "d71eb2d",
+                "fl_32x64_tps": 12626.8,
+                "fl_32x64_per_task_tps": 394.6,
+                "fl_16x64_per_task_tps": 796.3,
+                "note": "same-machine pre-megastep scheduler grid at the "
+                        "PR-7 revision (per-task window loop); this host "
+                        "is a single CPU core, so the 32x64 point is "
+                        "compute-bound at ~12k tps and the megastep runs "
+                        "at parity there — its dispatch-count win (~96 -> "
+                        "~6 jit dispatches per window, one batched tx "
+                        "emission) needs parallel lanes to show up as "
+                        "wall-clock"},
             "baseline_pr5": {
                 "revision": "544a4e2",
                 "fl_32x64_per_task_tps": 229.0,

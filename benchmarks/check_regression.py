@@ -46,6 +46,8 @@ from typing import Any, Dict, List, Optional
 # their quick/reduced values, so a quick CI run can still be gated)
 FLOORS: Dict[str, float] = {
     "BENCH_protocol.speedup": 3.0,
+    "BENCH_protocol.mega_speedup": 0.6,
+    "BENCH_protocol.fl_per_task_flatness": 0.35,
     "BENCH_protocol.window_loop_speedup": 1.0,
     "BENCH_engine.speedup": 1.0,
     "BENCH_shards.scaling": 1.5,
@@ -60,6 +62,8 @@ TOLERANCE: Dict[str, float] = {
     "BENCH_prover.verify_gas_reduction": 0.01,
     # wall-clock ratios on shared runners: looser
     "BENCH_protocol.speedup": 0.4,
+    "BENCH_protocol.mega_speedup": 0.35,
+    "BENCH_protocol.fl_per_task_flatness": 0.35,
     "BENCH_protocol.window_loop_speedup": 0.3,
     "BENCH_engine.speedup": 0.4,
     "BENCH_shards.scaling": 0.4,

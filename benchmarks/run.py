@@ -41,6 +41,8 @@ _HEADLINES = {
         "speedup": d["out"]["speedup"], "n_txs": d["out"]["n_txs"]},
     "BENCH_protocol": lambda d: {
         "speedup": d["speedup"],
+        "mega_speedup": d["mega_speedup"],
+        "fl_per_task_flatness": d["fl_per_task_flatness"],
         "window_loop_speedup": d["window_loop"]["fused_speedup"],
         "window_loop_flatness": d["window_loop"]["per_task_flatness"],
         "assert_point": d["assert_point"]},

@@ -43,6 +43,18 @@ def weighted_average_tree_jit(stacked_tree, scores, use_pallas: bool = False):
     return weighted_average_tree(stacked_tree, scores, use_pallas)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def weighted_average_tree_mega(stacked_trees, scores,
+                               use_pallas: bool = False):
+    """T Eq. 1 aggregations as ONE dispatch: leaves carry (T, n, ...) and
+    ``scores`` is (T, n).  Row t is bit-exact equal to
+    ``weighted_average_tree_jit`` on task t alone — each task's reduction
+    is element-wise independent along the new axis (the cross-task
+    megastep path; see fl/scheduler.py)."""
+    return jax.vmap(lambda t, s: weighted_average_tree(t, s, use_pallas))(
+        stacked_trees, scores)
+
+
 def weighted_psum_tree(local_tree, score, axis_names):
     """Mesh path: each `data`-axis group holds ONE trainer's params.
 

@@ -234,6 +234,7 @@ class VectorChain(EventHooks):
         if self.state_arrays is None:
             from repro.core.state import StateArrays
             self.state_arrays = StateArrays()
+            self.state_arrays.enable_dirty_tracking()
         self._state_handlers[self.fns.id(fn)] = handler
 
     def state_root(self) -> str:
@@ -508,6 +509,7 @@ class VectorRollup(ProverFace, EventHooks):
         if self.state_arrays is None:
             from repro.core.state import StateArrays
             self.state_arrays = StateArrays()
+            self.state_arrays.enable_dirty_tracking()
         self._state_handlers[self.fns.id(fn)] = handler
 
     def state_root(self) -> str:

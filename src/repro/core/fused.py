@@ -299,6 +299,7 @@ class FusedWindowLoop:
                 state.reputation[ids] = rep
                 state.balances[ids] = bal
                 state.stake[ids] = stake
+                state.mark_dirty(ids)
             elif op == "blocks":
                 flush_chain()
                 t_end = entry[1]

@@ -140,6 +140,7 @@ class ObjectLedgerFace:
         if self.state_arrays is None:
             from repro.core.state import StateArrays
             self.state_arrays = StateArrays()
+            self.state_arrays.enable_dirty_tracking()
         self._state_handlers[fn] = handler
 
     def state_root(self) -> str:

@@ -141,6 +141,57 @@ def _score_table_batched(eval_fn: Callable, stacked,
     return np.asarray(table, np.float64)
 
 
+def _mega_eval(eval_fn: Callable):
+    """Jitted task x oracle x trainer TRIPLE-vmapped form of ``eval_fn``
+    (the cross-task megastep scoring pass), cached beside the per-task
+    wrappers.  Per-trainer independence makes every (task, oracle,
+    trainer) cell bit-exact equal to the per-task double-vmap's cell."""
+    key = _eval_cache_key(eval_fn)
+    mkey = None if key is None else ("mega", key)
+    hit = _eval_cache_get(mkey)
+    if hit is not None:
+        return hit
+    fn = jax.jit(jax.vmap(
+        jax.vmap(jax.vmap(eval_fn, in_axes=(0, None)), in_axes=(None, 0)),
+        in_axes=(0, None)))
+    _eval_cache_put(mkey, fn)
+    return fn
+
+
+def mega_score_tables(eval_fn: Callable, mega_stacked,
+                      val: ValidationSlices) -> np.ndarray:
+    """(n_tasks, n_oracles, n_trainers) score tables for a whole stacked
+    task batch in ONE dispatch.  Requires equal-sized oracle slices
+    (``val.stacked``); the caller falls back to per-task quorum calls
+    otherwise."""
+    assert val.stacked is not None, "mega scoring needs stacked val slices"
+    return np.asarray(_mega_eval(eval_fn)(mega_stacked, val.stacked),
+                      np.float64)
+
+
+def quorum_from_table(table: np.ndarray, cfg: DONConfig = DONConfig(),
+                      adversarial_oracles: Optional[Dict[int, float]] =
+                      None):
+    """Median aggregation + outlier flagging over one (n_oracles,
+    n_trainers) score table — the tail of ``evaluate_quorum``, shared so
+    the megabatched path aggregates EXACTLY the same way."""
+    table = np.asarray(table, np.float64)
+    if adversarial_oracles:
+        for o, forged in adversarial_oracles.items():
+            table[o, :] = forged
+
+    median = np.median(table, axis=0)                   # robust aggregate
+    dev = np.abs(table - median[None, :]).mean(axis=1)  # per-oracle drift
+    flagged = [o for o in range(cfg.n_oracles) if dev[o] > cfg.outlier_tol]
+    honest = cfg.n_oracles - len(flagged)
+    quorum_ok = honest >= cfg.quorum_frac * cfg.n_oracles
+    report = {
+        "table": table, "median": median, "oracle_deviation": dev,
+        "flagged_oracles": flagged, "quorum_ok": bool(quorum_ok),
+    }
+    return jnp.asarray(median, jnp.float32), report
+
+
 def _score_table_loop(eval_fn: Callable, stacked, n_trainers: int,
                       slices) -> np.ndarray:
     """Legacy per-(oracle, trainer) Python loop (non-vmappable eval_fns)."""
@@ -192,20 +243,7 @@ def evaluate_quorum(eval_fn: Callable, trainer_params,
             _eval_cache_put(key, _UNBATCHABLE)
     if table is None:
         table = _score_table_loop(eval_fn, stacked, n_trainers, val.slices)
-    if adversarial_oracles:
-        for o, forged in adversarial_oracles.items():
-            table[o, :] = forged
-
-    median = np.median(table, axis=0)                       # robust aggregate
-    dev = np.abs(table - median[None, :]).mean(axis=1)      # per-oracle drift
-    flagged = [o for o in range(cfg.n_oracles) if dev[o] > cfg.outlier_tol]
-    honest = cfg.n_oracles - len(flagged)
-    quorum_ok = honest >= cfg.quorum_frac * cfg.n_oracles
-    report = {
-        "table": table, "median": median, "oracle_deviation": dev,
-        "flagged_oracles": flagged, "quorum_ok": bool(quorum_ok),
-    }
-    return jnp.asarray(median, jnp.float32), report
+    return quorum_from_table(table, cfg, adversarial_oracles)
 
 
 def cross_verify_aggregate(agg_fn: Callable, stacked_params, scores,

@@ -237,6 +237,7 @@ def sync_book_to_state(book: TrainerBook, state, account_ids) -> None:
     ids = np.asarray(account_ids, np.int64)
     state.ensure_ids(ids)
     state.reputation[ids] = np.asarray(book.reputation, np.float32)
+    state.mark_dirty(ids)
 
 
 def init_book(n: int, history: int = 16,

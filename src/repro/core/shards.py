@@ -154,6 +154,7 @@ class ShardedRollup(EventHooks):
         to it, and the merged state must not depend on the partition."""
         if self.state is None:
             self.state = StateArrays()
+            self.state.enable_dirty_tracking()
         for s in self.shards:
             s.state_arrays = self.state
             s.register_state(fn, handler)

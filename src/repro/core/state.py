@@ -196,29 +196,44 @@ def chunk_fold_digests(words: np.ndarray,
     return MIX_SEED ^ np.bitwise_xor.reduce(mixed.reshape(-1, chunk), axis=1)
 
 
-def chunked_root(words: np.ndarray, chunk: int = STATE_CHUNK_WORDS,
-                 backend: str = "auto", header: bytes = b"") -> str:
-    """Two-level commitment: per-chunk xor-mix digests (Pallas kernel on
-    TPU, NumPy mirror elsewhere), sealed with one sha256 over the chunk
-    digest vector + a schema/length header.  Returns a 32-hex root."""
-    if backend == "numpy":
-        digests = chunk_fold_digests(words, chunk)
-    else:
+def _fold_digests(words: np.ndarray, chunk: int,
+                  backend: str) -> np.ndarray:
+    """Full per-chunk digest vector, routed by ``backend`` ("numpy" forces
+    the mirror, "pallas" forces the kernel, "auto" probes the device)."""
+    if backend != "numpy":
         use_pallas = backend == "pallas" or (backend == "auto"
                                              and tpu_digest_backend())
         if use_pallas and len(words):
             import jax.numpy as jnp
             from repro.kernels.rollup_digest import rollup_chunk_digests
-            digests = np.asarray(rollup_chunk_digests(
+            return np.asarray(rollup_chunk_digests(
                 jnp.asarray(np.ascontiguousarray(words, np.uint32)),
                 chunk_p=chunk))
-        else:
-            digests = chunk_fold_digests(words, chunk)
+    return chunk_fold_digests(words, chunk)
+
+
+def _seal_digests(header: bytes, n_words: int, digests: np.ndarray) -> str:
+    """One sha256 over the chunk digest vector + schema/length header."""
     h = hashlib.sha256()
     h.update(header)
-    h.update(np.uint64(len(words)).tobytes())
+    h.update(np.uint64(n_words).tobytes())
     h.update(np.ascontiguousarray(digests, np.uint32).tobytes())
     return h.hexdigest()[:32]
+
+
+def chunked_root(words: np.ndarray, chunk: int = STATE_CHUNK_WORDS,
+                 backend: str = "auto", header: bytes = b"") -> str:
+    """Two-level commitment: per-chunk xor-mix digests (Pallas kernel on
+    TPU, NumPy mirror elsewhere), sealed with one sha256 over the chunk
+    digest vector + a schema/length header.  Returns a 32-hex root."""
+    return _seal_digests(header, len(words), _fold_digests(words, chunk,
+                                                           backend))
+
+
+def _dirty_impl(backend: str) -> Optional[str]:
+    """Map a digest-backend name onto a ``dirty_fold`` factory impl key
+    (``None`` lets the factory's own auto/env selection decide)."""
+    return backend if backend in ("numpy", "pallas") else None
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +268,14 @@ class StateArrays:
 
     def __init__(self, n_accounts: int = 0):
         self.n = 0
+        # incremental commitment (opt-in): caches of the committed word
+        # buffer + per-chunk digest vector, refreshed by refolding only
+        # the chunks covering rows marked dirty since the last seal.
+        # OFF by default — engine faces opt in at register_state time, so
+        # code that pokes the field arrays directly (tests, notebooks)
+        # keeps the always-correct full refold.
+        self._track_dirty = False
+        self._commit_caches: Dict[Any, Dict[str, Any]] = {}
         cap = max(64, n_accounts)
         for name, dtype in STATE_SCHEMA:
             setattr(self, name, np.zeros(cap, dtype))
@@ -274,7 +297,30 @@ class StateArrays:
                 new = np.zeros(cap, dtype)
                 new[: self.n] = old[: self.n]
                 setattr(self, name, new)
+        # the commitment is field-major over the filled prefix: growing
+        # ``n`` shifts every field's word offset, so cached buffers are
+        # layout-stale — drop them and let the next root rebuild in full
+        self._commit_caches.clear()
         self.n = n_accounts
+
+    # -- dirty-row tracking ----------------------------------------------------
+    def enable_dirty_tracking(self) -> None:
+        """Opt this state into incremental commitment.  Callers take on
+        the contract that EVERY write to the field arrays goes through a
+        path that calls ``mark_dirty`` (the default handlers and the
+        engine settlement paths do); direct array pokes after enabling
+        would leave cached chunk digests stale."""
+        self._track_dirty = True
+
+    def mark_dirty(self, ids) -> None:
+        """Record account rows whose fields changed since the last root.
+        Cheap append; the unique/refold work happens at seal time."""
+        if not self._track_dirty or not self._commit_caches:
+            return
+        ids = np.asarray(ids, np.int64)
+        if ids.size:
+            for cache in self._commit_caches.values():
+                cache["pending"].append(ids)
 
     def ensure_ids(self, ids: np.ndarray) -> None:
         if len(ids):
@@ -300,9 +346,59 @@ class StateArrays:
 
     def root(self, chunk: int = STATE_CHUNK_WORDS,
              backend: str = "auto") -> str:
-        """Chunked Merkle-style state root (shard-count independent)."""
-        return chunked_root(self.word_buffer(), chunk, backend,
-                            header=self.schema_header())
+        """Chunked Merkle-style state root (shard-count independent).
+
+        With dirty tracking enabled the word buffer and per-chunk digest
+        vector are cached; only the chunks covering rows touched since the
+        last call are refolded (``kernels/dirty_fold``) before the sha256
+        seal — O(touched) per window instead of O(state).  Pinned equal to
+        the full refold by tests/test_state.py."""
+        if not self._track_dirty:
+            return chunked_root(self.word_buffer(), chunk, backend,
+                                header=self.schema_header())
+        cache = self._commit_caches.get(("flat", chunk))
+        if cache is None:
+            words = self.word_buffer()
+            cache = {"words": words,
+                     "digests": _fold_digests(words, chunk, backend),
+                     "pending": []}
+            self._commit_caches[("flat", chunk)] = cache
+        elif cache["pending"]:
+            rows = np.unique(np.concatenate(cache["pending"]))
+            cache["pending"].clear()
+            rows = rows[rows < self.n]
+            if rows.size:
+                touched = self._patch_rows(cache["words"], self.n,
+                                           rows, rows)
+                dirty = np.unique(touched // chunk)
+                from repro.kernels.factory import get_kernel
+                cache["digests"][dirty] = get_kernel(
+                    "dirty_fold", _dirty_impl(backend))(
+                        cache["words"], dirty, chunk)
+        return _seal_digests(self.schema_header(), cache["words"].size,
+                             cache["digests"])
+
+    def _patch_rows(self, words: np.ndarray, m: int, rows: np.ndarray,
+                    pos: np.ndarray) -> np.ndarray:
+        """Overwrite the cached word buffer in place with the CURRENT
+        field values of ``rows`` and return the touched word indices.
+
+        ``words`` is a field-major encoding of ``m`` rows (``word_buffer``
+        for the flat commitment, ``_rows_words`` for a partition);
+        ``pos`` is each row's position within that row set.  Every schema
+        dtype is 4- or 8-byte, so field blocks are word-aligned and a
+        row's slot in field ``f`` is ``off_f + pos * itemsize//4``."""
+        touched = []
+        off = 0
+        for name, dtype in STATE_SCHEMA:
+            isw = np.dtype(dtype).itemsize // 4
+            vals = np.ascontiguousarray(
+                getattr(self, name)[rows]).view(np.uint32)
+            idx = off + pos[:, None] * isw + np.arange(isw)
+            words[idx] = vals.reshape(-1, isw)
+            touched.append(idx.ravel())
+            off += m * isw
+        return np.concatenate(touched)
 
     def _rows_words(self, idx: np.ndarray) -> np.ndarray:
         """Canonical u32 words over the selected rows, schema order."""
@@ -325,19 +421,63 @@ class StateArrays:
 
         These are the per-shard commitments merged into the fabric root
         (core/shards.py); unlike ``root()`` they depend on the partition.
+        With dirty tracking, each shard's word buffer + digest vector is
+        cached and only its dirty chunks refold.
         """
-        owner = account_owner(np.arange(self.n), n_shards)
-        return [chunked_root(self._rows_words(np.flatnonzero(owner == k)),
-                             chunk, backend,
-                             self.schema_header()
-                             + f"|shard={k}/{n_shards}".encode())
+        headers = [self.schema_header() + f"|shard={k}/{n_shards}".encode()
+                   for k in range(n_shards)]
+        if not self._track_dirty:
+            owner = account_owner(np.arange(self.n), n_shards)
+            return [chunked_root(
+                self._rows_words(np.flatnonzero(owner == k)),
+                chunk, backend, headers[k]) for k in range(n_shards)]
+        cache = self._commit_caches.get(("part", n_shards, chunk))
+        if cache is None:
+            owner = account_owner(np.arange(self.n), n_shards)
+            rows_k = [np.flatnonzero(owner == k) for k in range(n_shards)]
+            words_k = [self._rows_words(r) for r in rows_k]
+            cache = {"rows": rows_k, "words": words_k,
+                     "digests": [_fold_digests(w, chunk, backend)
+                                 for w in words_k],
+                     "pending": []}
+            self._commit_caches[("part", n_shards, chunk)] = cache
+        elif cache["pending"]:
+            rows = np.unique(np.concatenate(cache["pending"]))
+            cache["pending"].clear()
+            rows = rows[rows < self.n]
+            if rows.size:
+                from repro.kernels.factory import get_kernel
+                fold = get_kernel("dirty_fold", _dirty_impl(backend))
+                owner = account_owner(rows, n_shards)
+                for k in range(n_shards):
+                    rk = rows[owner == k]
+                    if not rk.size:
+                        continue
+                    shard_rows = cache["rows"][k]
+                    pos = np.searchsorted(shard_rows, rk)
+                    touched = self._patch_rows(cache["words"][k],
+                                               shard_rows.size, rk, pos)
+                    dirty = np.unique(touched // chunk)
+                    cache["digests"][k][dirty] = fold(
+                        cache["words"][k], dirty, chunk)
+        return [_seal_digests(headers[k], cache["words"][k].size,
+                              cache["digests"][k])
                 for k in range(n_shards)]
 
     def partition_root(self, shard: int, n_shards: int,
                        chunk: int = STATE_CHUNK_WORDS,
                        backend: str = "auto") -> str:
-        """Single-shard form of ``partition_roots``."""
-        return self.partition_roots(n_shards, chunk, backend)[shard]
+        """Single-shard form of ``partition_roots`` — folds ONLY the
+        requested shard's rows (the K-root loop the old form paid for one
+        answer), unless a tracked cache already amortizes all K."""
+        if self._track_dirty and ("part", n_shards,
+                                  chunk) in self._commit_caches:
+            return self.partition_roots(n_shards, chunk, backend)[shard]
+        owner = account_owner(np.arange(self.n), n_shards)
+        return chunked_root(
+            self._rows_words(np.flatnonzero(owner == shard)), chunk,
+            backend,
+            self.schema_header() + f"|shard={shard}/{n_shards}".encode())
 
     def copy(self) -> "StateArrays":
         out = StateArrays()
@@ -354,6 +494,7 @@ def _counter_handler(field: str):
     def handler(state: StateArrays, txs) -> None:
         state.ensure_ids(txs.sender_id)
         np.add.at(getattr(state, field), txs.sender_id, 1)
+        state.mark_dirty(txs.sender_id)
     return handler
 
 

@@ -19,6 +19,7 @@ aggregation consume them without restacking.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -94,6 +95,12 @@ def batched_batch_fn(raw_batch_fn: Callable[[int, int], Dict],
     return fn
 
 
+def _bucket(n: int, floor: int = 1) -> int:
+    """Round ``n`` up to its power-of-two bucket (the kernels/block_pack.py
+    idiom) so one compiled mega program serves every nearby task count."""
+    return max(floor, 1 << max(0, (int(n) - 1).bit_length()))
+
+
 class CohortKernels:
     """Jitted cohort-step kernels, shared across every VectorCohort built on
     the same (model, opt, dp) — N concurrent tasks then compile ONCE (a
@@ -153,6 +160,26 @@ class CohortKernels:
             return submitted, new_o, loss
         self.round_step = jax.jit(round_step,
                                   static_argnames=("use_fake",))
+        self._round_step_fn = round_step     # raw form for the mega vmap
+        self._mega_step = None
+
+    def mega_round_step(self):
+        """``vmap(tasks) ∘ round_step`` — T whole cohort rounds as ONE
+        jitted dispatch (MegaCohort).  Row t of every output is bit-exact
+        equal to ``round_step`` on task t's inputs alone: the per-trainer
+        programs are element-wise independent along the new task axis."""
+        if self._mega_step is None:
+            fn = self._round_step_fn
+
+            def mega(params, opt_state, batches, base_keys, rnds,
+                     mal_masks, keep_masks, use_fake):
+                return jax.vmap(
+                    lambda p, o, b, k, r, m, kp: fn(p, o, b, k, r, m, kp,
+                                                    use_fake))(
+                    params, opt_state, batches, base_keys, rnds,
+                    mal_masks, keep_masks)
+            self._mega_step = jax.jit(mega, static_argnames=("use_fake",))
+        return self._mega_step
 
 
 class VectorCohort:
@@ -192,12 +219,15 @@ class VectorCohort:
             [b == "malicious" for b in self.behaviors])
         self.kernels = kernels or CohortKernels(model, opt, dp)
         self._opt = None           # stacked opt state over selected trainers
+        self._opt_holder = None    # MegaCohort currently holding _opt
         self._round_counter = 0
 
     def __len__(self) -> int:
         return len(self.behaviors)
 
     def start_task(self, global_params, opt, sel_idx: Sequence[int]):
+        if self._opt_holder is not None:
+            self._opt_holder.flush_opt()
         k = len(sel_idx)
         o = opt.init(global_params)
         # one broadcast dispatch per leaf — jnp.stack([l] * k) built k
@@ -214,6 +244,10 @@ class VectorCohort:
 
     def train(self, global_params, rnd: int,
               sel_idx: Sequence[int]) -> Optional[CohortSubmissions]:
+        if self._opt_holder is not None:
+            # a megastep holds this cohort's opt state stacked on its task
+            # axis; reclaim it before stepping per-task
+            self._opt_holder.flush_opt()
         sel = np.asarray(sel_idx)
         part = self._participation(sel)
         if not part.any():
@@ -240,3 +274,177 @@ class VectorCohort:
         cid = self.store.put(jax.tree.map(np.asarray, stacked))
         idxs = [int(i) for i in sel[sub_pos]]
         return CohortSubmissions(idxs, stacked, {i: cid for i in idxs})
+
+
+@functools.lru_cache(maxsize=64)
+def _stack_fn(n: int):
+    """Jitted n-tree stack: ONE dispatch instead of an eager per-leaf
+    ``jnp.stack`` fan-out (the megastep assembles stacks every window)."""
+    return jax.jit(lambda *ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts))
+
+
+@functools.lru_cache(maxsize=64)
+def _unstack_fn(n: int):
+    """Jitted inverse: one dispatch returning n row-slices of a stacked
+    tree (eager ``l[i]`` per leaf per row costs hundreds of tiny ops)."""
+    return jax.jit(lambda t: tuple(
+        jax.tree.map(lambda l, i=i: l[i], t) for i in range(n)))
+
+
+def _stack_trees(trees):
+    return _stack_fn(len(trees))(*trees)
+
+
+@jax.jit
+def _gather_sorted(tree, rows, pos):
+    """Row-select + per-row gather in ONE dispatch: leaves (B, K, ...)
+    take rows ``rows`` then reorder each by its own index vector (the
+    per-task ``sub_pos`` sort)."""
+    return jax.tree.map(
+        lambda l: jax.vmap(lambda x, p: x[p])(l[rows], pos), tree)
+
+
+@dataclasses.dataclass
+class MegaRound:
+    """One megastep's outputs plus the row bookkeeping the scheduler needs
+    to score/aggregate across tasks in the same stacked layout."""
+
+    subs: List[Optional[CohortSubmissions]]  # per task (None = no cohort
+                                             # member participated)
+    raw: Any                  # device tree (B, K, ...), selection order —
+                              # the scoring input (B = pow2 task bucket)
+    sorted_full: Any          # device tree (Bf, K, ...) for the FULL-
+                              # participation tasks, rows in sub_pos order
+                              # (None when no task had full participation)
+    active: List[int]         # task index of raw row a (first len(active))
+    full_rows: List[int]      # task index of sorted_full row f
+    pos: List["np.ndarray"]   # per active row: sub_pos into selection order
+
+
+class MegaCohort:
+    """Cross-task megastep over T same-kernel ``VectorCohort``s: stack the
+    cohorts' round inputs on a leading task axis (padded to its pow2
+    bucket) and advance every task with ONE ``vmap(tasks) ∘ vmap(trainers)``
+    dispatch — replacing T per-task jit calls per round.
+
+    Semantics are pinned bit-exact to stepping each ``VectorCohort.train``
+    alone (tests/test_mega.py): participation draws come from each
+    cohort's own rng in the same order, opt state / round counters advance
+    per task, and blob cids are content-identical.  Ragged participation
+    only changes the host-side gather — the kernel always trains all K
+    selected trainers with per-task keep masks, exactly like the per-task
+    path.
+    """
+
+    def __init__(self, cohorts: Sequence["VectorCohort"]):
+        assert cohorts, "empty mega group"
+        k0 = cohorts[0].kernels
+        assert all(c.kernels is k0 for c in cohorts), \
+            "mega group must share ONE CohortKernels (same model/opt/dp)"
+        self.cohorts = list(cohorts)
+        self.kernels = k0
+        # opt-state residency: between consecutive megasteps over the SAME
+        # row layout the stacked opt tree stays here (one (T, K, P) copy
+        # each way per window otherwise).  While held, each active
+        # cohort's ``_opt_holder`` points back so any per-task consumer
+        # (VectorCohort.train / start_task) flushes before reading.
+        self._opt_stacked = None
+        self._opt_rows: Optional[List[int]] = None
+        self._opt_active: Optional[List[int]] = None
+
+    def flush_opt(self) -> None:
+        """Hand the cached stacked opt state back to the cohorts (called
+        before any per-task path touches ``cohort._opt``)."""
+        if self._opt_stacked is None:
+            return
+        opts = _unstack_fn(len(self._opt_rows))(self._opt_stacked)
+        for a, t in enumerate(self._opt_active):
+            self.cohorts[t]._opt = opts[a]
+            self.cohorts[t]._opt_holder = None
+        self._opt_stacked = self._opt_rows = self._opt_active = None
+
+    def _stacked_opt(self, rows: List[int], active: List[int]):
+        if (self._opt_rows == rows
+                and all(self.cohorts[t]._opt_holder is self
+                        for t in active)):
+            return self._opt_stacked
+        self.flush_opt()
+        for t in rows:
+            holder = self.cohorts[t]._opt_holder
+            if holder is not None and holder is not self:
+                holder.flush_opt()
+        return _stack_trees([self.cohorts[t]._opt for t in rows])
+
+    def train(self, params_list: Sequence[Any], rnds: Sequence[int],
+              sel_list: Sequence[Sequence[int]]) -> Optional[MegaRound]:
+        cohorts = self.cohorts
+        sels = [np.asarray(s) for s in sel_list]
+        K = sels[0].size
+        assert all(s.size == K for s in sels), "mega group needs uniform K"
+        parts = [c._participation(s) for c, s in zip(cohorts, sels)]
+        active = [t for t in range(len(cohorts)) if parts[t].any()]
+        subs: List[Optional[CohortSubmissions]] = [None] * len(cohorts)
+        if not active:
+            return MegaRound(subs, None, None, [], [], [])
+        # task-axis rows: active tasks padded to the pow2 bucket by
+        # replicating row 0 (padded outputs are computed and dropped)
+        rows = active + [active[0]] * (_bucket(len(active)) - len(active))
+        batches = {t: cohorts[t].batch_fn(sels[t], rnds[t]) for t in active}
+        mal = np.stack([cohorts[t].is_malicious[sels[t]] for t in rows])
+        keep = np.stack([parts[t] & ~cohorts[t].is_malicious[sels[t]]
+                         for t in rows])
+        submitted, new_opt, _loss = self.kernels.mega_round_step()(
+            _stack_trees([params_list[t] for t in rows]),
+            self._stacked_opt(rows, active),
+            _stack_trees([batches[t] for t in rows]),
+            jnp.stack([cohorts[t].key for t in rows]),
+            jnp.asarray([cohorts[t]._round_counter for t in rows],
+                        jnp.uint32),
+            jnp.asarray(mal), jnp.asarray(keep),
+            use_fake=bool(any(mal[a].any()
+                              for a in range(len(active)))))
+        # keep the new opt stacked here; cohorts flush it back on demand.
+        # Padded rows replicate row 0's inputs, so only the active slices
+        # are authoritative — flush_opt hands back exactly those
+        self._opt_stacked, self._opt_rows = new_opt, rows
+        self._opt_active = active
+        for t in active:
+            cohorts[t]._opt_holder = self
+            cohorts[t]._round_counter += 1
+        # per-task submitted gather (the VectorCohort.train sub_pos logic)
+        pos, full_rows = [], []
+        for t in active:
+            if parts[t].all():
+                pos.append(np.argsort(sels[t]))
+                full_rows.append(t)
+            else:
+                p = np.flatnonzero(parts[t])
+                pos.append(p[np.argsort(sels[t][p])])
+        # full tasks: one vmapped sorted gather + ONE host materialization
+        sorted_full = None
+        if full_rows:
+            fa = [active.index(t) for t in full_rows]
+            fb = fa + [fa[0]] * (_bucket(len(fa)) - len(fa))
+            pos_mat = np.stack([pos[a] for a in fb])
+            sorted_full = _gather_sorted(submitted, jnp.asarray(fb),
+                                         jnp.asarray(pos_mat))
+            host = jax.device_get(sorted_full)
+            for f, t in enumerate(full_rows):
+                stacked = jax.tree.map(lambda l, f=f: l[f], host)
+                cid = cohorts[t].store.put(stacked)
+                idxs = [int(i) for i in sels[t][pos[active.index(t)]]]
+                subs[t] = CohortSubmissions(idxs, stacked,
+                                            {i: cid for i in idxs})
+        # ragged tasks: per-task device gather (K' differs per task)
+        for a, t in enumerate(active):
+            if subs[t] is not None:
+                continue
+            stacked = jax.tree.map(
+                np.asarray,
+                jax.tree.map(lambda l, a=a, p=pos[a]: l[a][p], submitted))
+            cid = cohorts[t].store.put(stacked)
+            idxs = [int(i) for i in sels[t][pos[a]]]
+            subs[t] = CohortSubmissions(idxs, stacked,
+                                        {i: cid for i in idxs})
+        return MegaRound(subs, submitted, sorted_full, active, full_rows,
+                         pos)

@@ -27,13 +27,18 @@ import logging
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import (tree_flat, tree_flat_stacked,
-                                    weighted_average_tree_jit)
-from repro.core.oracle import evaluate_quorum
+                                    weighted_average_tree_jit,
+                                    weighted_average_tree_mega)
+from repro.core.oracle import (_UNBATCHABLE, _eval_cache_get,
+                               _eval_cache_key, evaluate_quorum,
+                               mega_score_tables, quorum_from_table)
 from repro.core.reputation import model_distances
-from repro.fl.cohort import AgentCohort, CohortSubmissions
+from repro.fl.cohort import (AgentCohort, CohortSubmissions, MegaCohort,
+                             VectorCohort, _unstack_fn)
 
 _log = logging.getLogger(__name__)
 # (chain type, rollup type) pairs already warned about falling back to
@@ -205,15 +210,27 @@ class Scheduler:
     then-execute loop — "auto" (on when the stack supports it), True
     (assert support), or False (always Python-stepped).  Fused and stepped
     runs are pinned to identical outputs (tests/test_fused.py).
+    ``megabatch``: when every task stepping in a window is in its "round"
+    phase and the cohorts share one compiled kernel set, run the whole
+    window as ONE cross-task megastep — a (tasks, trainers) double-vmapped
+    train/score/aggregate program plus one megabatched tx emission —
+    instead of T per-task dispatches.  "auto" (on when eligible), True
+    (assert eligibility on all-round windows), or False (always per-task).
+    Megabatched and per-task windows are pinned to identical outputs
+    (tests/test_mega.py); the per-task path remains the reference
+    semantics.
     """
 
     def __init__(self, node, *, window: float = 1.0, seal_every: int = 0,
-                 background=None, fused="auto"):
+                 background=None, fused="auto", megabatch="auto"):
         self.node = node
         self.window = window
         self.seal_every = seal_every
         self.background = background
         self.fused = fused
+        self.megabatch = megabatch
+        self.mega_windows = 0       # windows driven by the megastep path
+        self._mega = None           # (cohort-id key, cached MegaCohort)
         self._loop = None           # active FusedWindowLoop during run()
         self.runtimes: List[TaskRuntime] = []
         self._bg_pos = 0
@@ -281,6 +298,126 @@ class Scheduler:
                                 int(txs.gas[k]), float(txs.submit_time[k])))
         self._bg_pos = j
 
+    # -- cross-task megastep ---------------------------------------------------
+    def _mega_eligible(self, rts: List[TaskRuntime]) -> bool:
+        """One megastep can replace this window's per-task loop iff every
+        stepping task is mid-round on the SAME compiled cohort program and
+        the node's L2 target takes SoA batches.  Mixed-phase windows
+        (select/settle interleavings) fall back silently — they are
+        inherently sequential; capability gaps raise under
+        ``megabatch=True``."""
+        if not self.megabatch or self.background is not None:
+            return False
+        if any(rt.phase != "round" for rt in rts):
+            return False
+        node = self.node
+        cohorts = [rt.cohort for rt in rts]
+        target = node._target()
+        ok = (getattr(target, "soa_native", False)
+              and node.val_slices is not None
+              and node.val_slices.stacked is not None
+              and all(isinstance(c, VectorCohort) for c in cohorts)
+              and all(c.kernels is cohorts[0].kernels for c in cohorts)
+              and len({len(rt.sel_idx) for rt in rts}) == 1
+              # sharded fabric: megabatched emission needs explicit pins
+              # (least-loaded routing is submit-call-granularity dependent)
+              and (not hasattr(target, "shards")
+                   or all(rt.shard is not None for rt in rts))
+              and (_eval_cache_get(_eval_cache_key(node.eval_fn))
+                   is not _UNBATCHABLE))
+        if not ok and self.megabatch is True:
+            raise RuntimeError(
+                "Scheduler(megabatch=True): window is not megabatchable "
+                "(needs a SoA-native target, stacked validation slices, "
+                "VectorCohorts sharing one CohortKernels, uniform cohort "
+                "size, and shard pins on a fabric)")
+        return ok
+
+    def _mega_window(self, rts: List[TaskRuntime]) -> List[TaskRuntime]:
+        """Run one round for EVERY task in ``rts`` as a single megastep.
+
+        Bit-exact to stepping each TaskRuntime._round in order: training,
+        scoring and Eq. 1 aggregation are task-independent along the vmap
+        axis, tx stamp times are order-preserving under one concatenated
+        emission, and per-cohort participation rngs are independent streams
+        (tests/test_mega.py pins all of it element-wise)."""
+        node = self.node
+        self.mega_windows += 1
+        # the MegaCohort is cached across windows so its stacked opt state
+        # stays resident between consecutive megasteps of the same group
+        key = tuple(id(rt.cohort) for rt in rts)
+        if self._mega is None or self._mega[0] != key:
+            self._mega = (key, MegaCohort([rt.cohort for rt in rts]))
+        mega = self._mega[1].train(
+            [rt.params for rt in rts], [rt.rnd for rt in rts],
+            [rt.sel_idx for rt in rts])
+        for rt in rts:
+            rt.rnd += 1
+        groups = []
+        for i, rt in enumerate(rts):
+            subs = mega.subs[i]
+            if subs is None:
+                continue
+            senders = []
+            for j in subs.idxs:
+                tid = node.trainer_ids[j]
+                node.tsc.submit_local_model(tid, rt.task_id, rt.rnd - 1,
+                                            subs.cids[j])
+                senders.append(tid)
+            groups.append(("submitLocalModel", senders, rt.shard))
+            groups.append(("calculateObjectiveRep", senders, rt.shard))
+            rt.completed[subs.idxs] += 1.0
+        node._tx_batch_many(groups)
+        scores_by_task: Dict[int, jnp.ndarray] = {}
+        if mega.active:
+            try:
+                tables = mega_score_tables(node.eval_fn, mega.raw,
+                                           node.val_slices)
+            except Exception:
+                # eval_fn turned out non-vmappable: score per task (the
+                # auto-mode fallback caches the verdict, so later windows
+                # skip the megastep entirely via _mega_eligible)
+                tables = None
+            for a, t in enumerate(mega.active):
+                if tables is not None:
+                    scores, _report = quorum_from_table(
+                        tables[a][:, mega.pos[a]], node.don)
+                else:
+                    scores, _report = evaluate_quorum(
+                        node.eval_fn, mega.subs[t].stacked, None, node.don,
+                        slices=node.val_slices)
+                scores_by_task[t] = scores
+                rts[t].last_scores = np.asarray(scores, np.float32)
+        # full-participation tasks merge in ONE vmapped Eq. 1 dispatch;
+        # ragged tasks keep per-task reductions (a padded zero-weight lane
+        # would reassociate the sum and break bit-exactness).  The Pallas
+        # agg kernel is not vmap-audited — per-task covers it.
+        full = [] if node.use_pallas_agg else mega.full_rows
+        if full:
+            n_rows = int(jax.tree.leaves(mega.sorted_full)[0].shape[0])
+            pad_rows = full + [full[0]] * (n_rows - len(full))
+            smat = jnp.stack([scores_by_task[t] for t in pad_rows])
+            newp = _unstack_fn(n_rows)(
+                weighted_average_tree_mega(mega.sorted_full, smat))
+            for f, t in enumerate(full):
+                rts[t].params = newp[f]
+        for t in mega.active:
+            if t not in full:
+                rts[t].params = weighted_average_tree_jit(
+                    mega.subs[t].stacked, scores_by_task[t],
+                    use_pallas=node.use_pallas_agg)
+            node.tsc.advance_round(rts[t].task_id)
+            rts[t].last_subs = mega.subs[t]
+        for i, rt in enumerate(rts):
+            if mega.subs[i] is None:
+                node.tsc.advance_round(rt.task_id)
+        ready = []
+        for rt in rts:
+            if rt.rnd >= rt.rounds:
+                rt._finalize()
+                ready.append(rt)
+        return ready
+
     def run(self) -> Dict[str, object]:
         """Drive every task to completion; returns {task_id: FLTaskResult}.
 
@@ -328,14 +465,17 @@ class Scheduler:
                 # the clock would strand late-stamped protocol txs across
                 # block boundaries
                 node._clock = max(node._clock, t)
-                ready = []
-                for rt in self.runtimes:
-                    if rt.phase in ("settle_ready", "done") or \
-                            rt.start_window > w:
-                        continue
-                    rt.step()
-                    if rt.phase == "settle_ready":
-                        ready.append(rt)
+                stepping = [rt for rt in self.runtimes
+                            if rt.phase not in ("settle_ready", "done")
+                            and rt.start_window <= w]
+                if stepping and self._mega_eligible(stepping):
+                    ready = self._mega_window(stepping)
+                else:
+                    ready = []
+                    for rt in stepping:
+                        rt.step()
+                        if rt.phase == "settle_ready":
+                            ready.append(rt)
                 if ready:
                     node.settle_window(ready)
                 if self.seal_every and node.rollup is not None and \

@@ -217,6 +217,7 @@ class AutoDFL:
         sync_book_to_state(self.book, state, ids)
         state.balances[ids] = balances
         state.stake[ids] = stake
+        state.mark_dirty(ids)
 
     def _tx(self, fn: str, sender: str, payload: Dict):
         self._tx_batch(fn, [sender], [payload])
@@ -264,6 +265,68 @@ class AutoDFL:
                                  payloads[k] if payloads else {}, gas,
                                  float(times[k])))
         self.protocol_calls[fn] = self.protocol_calls.get(fn, 0) + n
+
+    def _tx_batch_many(self, groups) -> None:
+        """Megabatched emission: ``groups`` is ``[(fn, senders, shard)]``
+        in the order sequential ``_tx_batch`` calls would have run.  Times
+        are stamped over the concatenation exactly as those calls would
+        stamp them (clock + 0.01 per tx), and the whole window's protocol
+        traffic lands in ONE ``submit_arrays`` per destination shard —
+        per-shard tx streams are identical to the per-task calls (submit
+        only stages; batches/blocks form at seal time), while the
+        interconnect model sees the coalesced routing messages (same
+        bytes, fewer transfers — the megabatching win).  SoA targets only
+        (payload callables are never materialized there)."""
+        groups = [(fn, s, shard) for fn, s, shard in groups if s]
+        total = sum(len(s) for _, s, _ in groups)
+        if total == 0:
+            return
+        if self.pre_tx_hook is not None:
+            self.pre_tx_hook(self._clock)
+        target = self._target()
+        assert getattr(target, "soa_native", False), \
+            "_tx_batch_many needs a SoA-native target"
+        from repro.core.engine import TxArrays
+        times = np.empty(total, np.float64)
+        gas = np.empty(total, np.int64)
+        fn_id = np.empty(total, np.int32)
+        sender_id = np.empty(total, np.int32)
+        shard_of = np.full(total, -1, np.int64)
+        o = 0
+        for fn, senders, shard in groups:
+            n = len(senders)
+            # advance the clock group-by-group with _tx_batch's exact
+            # arithmetic — one flat arange over the concatenation drifts
+            # by ulps and un-pins event timestamps
+            times[o: o + n] = self._clock + 0.01 * np.arange(1, n + 1)
+            self._clock += 0.01 * n
+            gas[o: o + n] = DEFAULT_GAS.l1_per_call.get(fn, 30000)
+            fn_id[o: o + n] = target.fns.id(fn)
+            sender_id[o: o + n] = [target.sender_id(s) for s in senders]
+            if shard is not None:
+                shard_of[o: o + n] = shard
+            self.protocol_calls[fn] = self.protocol_calls.get(fn, 0) + n
+            o += n
+        fused = self._fused if (self._fused is not None
+                                and self._fused.covers(target)) else None
+        sharded = hasattr(target, "shards")
+        if sharded:
+            assert (shard_of >= 0).all(), \
+                "megabatched emission on a fabric needs per-task shard pins"
+            dests = np.unique(shard_of)
+        else:
+            dests = np.array([-1])
+        for k in dests:
+            m = shard_of == k if sharded else slice(None)
+            batch = TxArrays(times[m], gas[m], fn_id[m], sender_id[m],
+                             target.fns)
+            pin = int(k) if sharded else None
+            if fused is not None:
+                fused.submit(target, batch, shard=pin)
+            elif pin is not None:
+                target.submit_arrays(batch, shard=pin)
+            else:
+                target.submit_arrays(batch)
 
     # -- fused end-of-task settlement (step 16, Eq. 2-10) -------------------------
     def settle_window(self, runtimes) -> None:

@@ -99,6 +99,15 @@ def _load() -> None:
     register_kernel("rollup_digest", "pallas", _digest_pallas,
                     tpu_default=True)
 
+    # dirty-chunk refold (StateArrays incremental commitment): digests of
+    # only the chunks a window touched, patched into the cached vector
+    from repro.kernels import dirty_fold as df
+    register_kernel("dirty_fold", "numpy", df.dirty_fold_np,
+                    cpu_default=True)
+    register_kernel("dirty_fold", "jax", df.dirty_fold_jax)
+    register_kernel("dirty_fold", "pallas", df.dirty_fold_pallas,
+                    tpu_default=True)
+
 
 def available_impls(op: str) -> Tuple[str, ...]:
     _load()

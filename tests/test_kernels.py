@@ -209,6 +209,44 @@ def test_batch_seal_matches_single_digest():
     assert int(out[0]) == xor_fold_digest(words)
 
 
+@pytest.mark.parametrize("n_words,n_dirty,seed", [
+    (1, 1, 0),
+    (100, 1, 1),                       # single sub-chunk buffer
+    (5_000, 2, 2),                     # padded tail chunk dirty
+    (70_000, 7, 3),
+    (300_000, 146, 4),                 # every chunk dirty (dup ids too)
+])
+def test_dirty_fold_impls_bit_exact(n_words, n_dirty, seed):
+    from repro.core.state import STATE_CHUNK_WORDS, chunk_fold_digests
+    from repro.kernels.dirty_fold import (dirty_fold_jax, dirty_fold_np,
+                                          dirty_fold_pallas)
+    g = np.random.default_rng(seed)
+    words = g.integers(0, 2**32, n_words, dtype=np.uint64).astype(np.uint32)
+    n_chunks = -(-n_words // STATE_CHUNK_WORDS)
+    ids = g.integers(0, n_chunks, n_dirty)
+    # the mirror IS the full fold restricted to the dirty ids
+    want = chunk_fold_digests(words, STATE_CHUNK_WORDS)[ids]
+    got = dirty_fold_np(words, ids, STATE_CHUNK_WORDS)
+    assert got.dtype == np.uint32
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        dirty_fold_jax(words, ids, STATE_CHUNK_WORDS), want)
+    np.testing.assert_array_equal(
+        dirty_fold_pallas(words, ids, STATE_CHUNK_WORDS, interpret=True),
+        want)
+
+
+def test_dirty_fold_empty_ids():
+    from repro.core.state import STATE_CHUNK_WORDS
+    from repro.kernels.dirty_fold import (dirty_fold_jax, dirty_fold_np,
+                                          dirty_fold_pallas)
+    words = np.arange(4096, dtype=np.uint32)
+    none = np.empty(0, np.int64)
+    for impl in (dirty_fold_np, dirty_fold_jax, dirty_fold_pallas):
+        out = impl(words, none, STATE_CHUNK_WORDS)
+        assert out.shape == (0,) and out.dtype == np.uint32
+
+
 def test_kernel_factory_selection():
     from repro.kernels import factory
     from repro.kernels.block_pack import block_pack_np
@@ -216,6 +254,8 @@ def test_kernel_factory_selection():
     assert set(factory.available_impls("block_pack")) == \
         {"numpy", "jax", "pallas"}
     assert set(factory.available_impls("batch_seal")) == \
+        {"numpy", "jax", "pallas"}
+    assert set(factory.available_impls("dirty_fold")) == \
         {"numpy", "jax", "pallas"}
     with pytest.raises(KeyError, match="unknown kernel op"):
         factory.get_kernel("no_such_op")

@@ -124,6 +124,60 @@ def test_state_arrays_partition_roots_cover_disjoint_rows():
         assert (parts2[k] != parts[k]) == (k == owner)
 
 
+# -- incremental commitment: dirty-chunk refold == full refold -----------------
+def test_incremental_root_pinned_to_full_refold():
+    """A tracked state's cached root must equal the full refold after every
+    window of scattered writes, including writes landing in the padded tail
+    chunk and across chunk boundaries."""
+    rng = np.random.default_rng(7)
+    s = StateArrays(1500)               # ~4 chunks of committed words
+    s.enable_dirty_tracking()
+    assert s.root() == s.copy().root()  # cache build == untracked full fold
+    for _ in range(5):
+        ids = rng.integers(0, 1500, 40)
+        s.balances[ids] += 1.5
+        s.reputation[ids] = rng.random(40, dtype=np.float32)
+        s.submissions[ids] += 1
+        s.mark_dirty(ids)
+        assert s.root() == s.copy().root()
+    # untracked rows stay stale-proof: a no-op window reuses the cache
+    assert s.root() == s.copy().root()
+
+
+def test_incremental_partition_roots_pinned_and_growth_invalidates():
+    rng = np.random.default_rng(8)
+    s = StateArrays(900)
+    s.enable_dirty_tracking()
+    assert s.partition_roots(3) == s.copy().partition_roots(3)
+    ids = rng.integers(0, 900, 25)
+    s.stake[ids] = 2.0
+    s.mark_dirty(ids)
+    assert s.partition_roots(3) == s.copy().partition_roots(3)
+    assert s.partition_root(1, 3) == s.copy().partition_roots(3)[1]
+    # growing n shifts every field's word offset -> caches must drop
+    s.ensure(2000)
+    s.balances[1999] = 9.0
+    s.mark_dirty(np.array([1999]))
+    assert s.root() == s.copy().root()
+    assert s.partition_roots(3) == s.copy().partition_roots(3)
+
+
+def test_ledger_faces_enable_tracking_and_stay_pinned():
+    """Every engine face opts its StateArrays into dirty tracking at
+    register_state, and the roots it reports stay equal to an untracked
+    full refold of the same rows."""
+    for make in (lambda: VectorChain(), lambda: VectorRollup(VectorChain())):
+        backend = make()
+        for fn, handler in default_state_handlers().items():
+            backend.register_state(fn, handler)
+        assert backend.state_arrays._track_dirty
+        txs = [Tx("submitLocalModel", f"m{i % 5}", {}, 1000, 0.1 * (i + 1))
+               for i in range(10)]
+        _feed(backend, txs)
+        st = backend.state_arrays
+        assert backend.state_root() == st.copy().root()
+
+
 # -- handlers written once, run on all four LedgerBackend faces ----------------
 def _feed(backend, txs):
     for t in txs:
