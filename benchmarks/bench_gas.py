@@ -7,8 +7,7 @@ published numbers and the 'up to 20x' headline claim.
 from __future__ import annotations
 
 from repro.api import build_stack, preset
-from repro.core.gas import (DEFAULT_GAS, FUNCTIONS, gas_reduction, l1_gas,
-                            l2_gas)
+from repro.core.gas import FUNCTIONS, gas_reduction, l1_gas, l2_gas
 from repro.core.ledger import Tx
 
 # Table I ground truth (Total column), for tolerance checks.

@@ -44,7 +44,6 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-import numpy as np
 
 from repro.api import ShardSpec, build_stack, preset
 from repro.core.state import default_state_handlers

@@ -11,7 +11,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api import ChainSpec, FLTaskSpec, NodeSpec, RollupSpec
 from repro.configs.registry import get_config

@@ -9,7 +9,6 @@ Usage:
     PYTHONPATH=src python examples/train_multi_pod.py \
         --arch qwen2-0.5b --rounds 3 --local-steps 2 --host-mesh --reduced
 """
-import argparse
 
 from repro.launch.train import main as train_main
 

@@ -1,0 +1,14 @@
+"""Invariant-aware static checker + runtime sanitizer for the stack.
+
+Two enforcement layers over ONE shared invariant catalog
+(``analysis/invariants.py``):
+
+- ``analysis/lint.py`` — AST-based static pass (``python -m
+  repro.analysis.lint src/repro``) with repo-specific rules R001-R005.
+- ``analysis/sanitize.py`` — runtime sanitizer (``REPRO_SANITIZE=1``)
+  that wraps the engine faces and cross-checks the same invariants
+  dynamically (R001/R005-R007).
+
+See docs/ANALYSIS.md for the rule catalog and suppression syntax.
+"""
+from repro.analysis.invariants import CATALOG, Invariant  # noqa: F401

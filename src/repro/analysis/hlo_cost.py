@@ -355,7 +355,8 @@ class HloModule:
             return c
         if oc in ("call", "conditional"):
             for target in re.findall(
-                    r"(?:to_apply|branch_computations=\{|true_computation|false_computation)=?%?([\w.\-]+)",
+                    r"(?:to_apply|branch_computations=\{|true_computation"
+                    r"|false_computation)=?%?([\w.\-]+)",
                     op.attrs):
                 c.add(self.cost(target))
             if not fused:
@@ -415,7 +416,8 @@ class HloModule:
                 c.bytes += in_bytes + op.out_bytes
             return c
         if oc in ("reduce", "reduce-window"):
-            c.flops += float(sum(s.elems for s in operand_shapes[: max(1, len(operand_shapes) // 2)]))
+            half = max(1, len(operand_shapes) // 2)
+            c.flops += float(sum(s.elems for s in operand_shapes[:half]))
             if not fused:
                 c.bytes += in_bytes + op.out_bytes
             return c

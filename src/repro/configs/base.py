@@ -7,7 +7,7 @@ documented skips) defines the dry-run / roofline cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds used by hybrid / mixed stacks.
@@ -134,7 +134,8 @@ class ModelConfig:
             c = counts[kind]
             if kind in (ATTN, MAMBA) and self.moe is not None:
                 # layers alternate MoE / dense FFN with the MoE period
-                if (i % self.moe.period) == (self.moe.period - 1) or self.moe.period == 1:
+                per = self.moe.period
+                if per == 1 or (i % per) == (per - 1):
                     c = (self._attn_params() if kind == ATTN else self._mamba_params())
                     c += self._ffn_params_moe()
             total += c * n_rep
@@ -161,7 +162,8 @@ class ModelConfig:
         n = 0
         for i, kind in enumerate(self.pattern):
             if kind in (ATTN, MAMBA):
-                if self.moe.period == 1 or (i % self.moe.period) == (self.moe.period - 1):
+                per = self.moe.period
+                if per == 1 or (i % per) == (per - 1):
                     n += 1
         return n * self.n_periods
 
@@ -184,7 +186,8 @@ class ModelConfig:
         di = d * self.mamba_expand
         ds = self.mamba_d_state
         # in_proj (x and z), conv, ssm params (dt, B, C proj), out_proj
-        return d * 2 * di + di * self.mamba_d_conv + di * (ds * 2 + di // 16 + 1) + di * d
+        return (d * 2 * di + di * self.mamba_d_conv
+                + di * (ds * 2 + di // 16 + 1) + di * d)
 
     def _mlstm_params(self) -> int:
         d = self.d_model

@@ -137,6 +137,34 @@ class EventLog:
         self._events.append(ev)
         return ev
 
+    def splice(self, inserts) -> None:
+        """Insert event runs at recorded positions and renumber ``seq ==
+        position`` across the whole stream — THE one sanctioned bulk-
+        mutation path (rule R005: only this module touches ``_events``).
+
+        ``inserts`` is a sequence of ``(position, events)`` pairs with
+        positions relative to the pre-splice stream, ascending; the
+        inserted events' ``seq`` values are ignored and rewritten.  The
+        fused window loop uses this to land deferred ``BlockPacked``
+        events exactly where the stepped path emitted them; callers must
+        not have handed out cursors past the first splice point.
+        """
+        merged: List[LedgerEvent] = []
+        prev = 0
+        for pos, evs in inserts:
+            if pos < prev:
+                raise ValueError("splice positions must be ascending")
+            merged.extend(self._events[prev:pos])
+            merged.extend(evs)
+            prev = pos
+        merged.extend(self._events[prev:])
+        # in-place renumber: the log owns its event objects, so rewriting
+        # seq on the frozen dataclasses is unobservable to drained readers
+        for i, e in enumerate(merged):
+            if e.seq != i:
+                object.__setattr__(e, "seq", i)
+        self._events[:] = merged
+
     def since(self, cursor: int) -> List[LedgerEvent]:
         return self._events[cursor:]
 

@@ -609,18 +609,16 @@ class FusedWindowLoop:
 
     def _splice_block_events(self, times, ntx, gas_used, height0,
                              markers) -> None:
-        """Rebuild the typed stream with BlockPacked events at the
-        positions the stepped path emitted them, renumbering ``seq``."""
+        """Land BlockPacked events at the positions the stepped path
+        emitted them via ``EventLog.splice`` (the one sanctioned bulk-
+        mutation path — rule R005; the log renumbers ``seq``)."""
         chain = self.chain
-        evs = chain.events._events
-        merged: List[Any] = []
-        prev = 0
+        inserts: List[Any] = []
         for pos, blo, bn in markers:
-            merged.extend(evs[prev:pos])
-            prev = pos
+            run: List[Any] = []
             for b in range(blo, blo + bn):
                 blk = chain.blocks[height0 + b]
-                merged.append(BlockPacked(
+                run.append(BlockPacked(
                     seq=-1, time=float(times[b]), shard=None,
                     height=blk.height, n_txs=int(ntx[b]),
                     gas_used=int(gas_used[b]), block_hash=blk.block_hash))
@@ -628,11 +626,5 @@ class FusedWindowLoop:
                     "height": blk.height, "n_txs": int(ntx[b]),
                     "gas_used": int(gas_used[b]),
                     "block_hash": blk.block_hash})
-        merged.extend(evs[prev:])
-        # in-place seq renumber: the log owns its event objects and no
-        # cursor has advanced past a splice point (clients drained before
-        # the run started), so mutating seq is unobservable
-        for i, e in enumerate(merged):
-            if e.seq != i:
-                object.__setattr__(e, "seq", i)
-        evs[:] = merged
+            inserts.append((pos, run))
+        chain.events.splice(inserts)

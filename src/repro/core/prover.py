@@ -273,9 +273,11 @@ class ProverPipeline:
                 due.append((owner, job))
         if due:
             # emit in the owner-then-job order the full scan produced
-            # (owners by first-enqueue order — _jobs keeps every owner)
-            order = {id(o): i for i, o in enumerate(self._jobs)}
-            due.sort(key=lambda oj: (order[id(oj[0])], oj[1].job))
+            # (owners by first-enqueue order — _jobs keeps every owner;
+            # keyed by the owner itself, not id(), so the order is stable
+            # across processes — rule R003)
+            order = {o: i for i, o in enumerate(self._jobs)}
+            due.sort(key=lambda oj: (order[oj[0]], oj[1].job))
             for owner, job in due:
                 self._complete(owner, job)
         n_done = len(due)

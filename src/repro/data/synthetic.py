@@ -57,7 +57,8 @@ def make_mnist_like(n: int = 4096, seed: int = 0,
         ang = 2 * np.pi * c / 10.0
         # class-specific oriented stripe + offset blob
         stripe = np.sin(8.0 * (np.cos(ang) * xx + np.sin(ang) * yy))
-        cx, cy = 0.3 + 0.4 * np.cos(ang) * 0.5 + 0.2, 0.3 + 0.4 * np.sin(ang) * 0.5 + 0.2
+        cx = 0.3 + 0.4 * np.cos(ang) * 0.5 + 0.2
+        cy = 0.3 + 0.4 * np.sin(ang) * 0.5 + 0.2
         blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / 0.02))
         pattern = (stripe * 0.6 + blob * 1.2)[None, :, :, None]
         jitter = rng.normal(1.0, 0.1, (len(idx), 1, 1, 1)).astype(np.float32)

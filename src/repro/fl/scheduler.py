@@ -345,7 +345,8 @@ class Scheduler:
         self.mega_windows += 1
         # the MegaCohort is cached across windows so its stacked opt state
         # stays resident between consecutive megasteps of the same group
-        key = tuple(id(rt.cohort) for rt in rts)
+        # (keyed by the cohort objects themselves, not id() — rule R003)
+        key = tuple(rt.cohort for rt in rts)
         if self._mega is None or self._mega[0] != key:
             self._mega = (key, MegaCohort([rt.cohort for rt in rts]))
         mega = self._mega[1].train(

@@ -95,7 +95,16 @@ def _load() -> None:
         return int(rollup_digest(jnp.asarray(
             np.ascontiguousarray(words, np.uint32))))
 
+    def _digest_jax(words):
+        import jax.numpy as jnp
+
+        import numpy as np
+        from repro.kernels.rollup_digest import rollup_digest_jax
+        return int(rollup_digest_jax(jnp.asarray(
+            np.ascontiguousarray(words, np.uint32))))
+
     register_kernel("rollup_digest", "numpy", _digest_np, cpu_default=True)
+    register_kernel("rollup_digest", "jax", _digest_jax)
     register_kernel("rollup_digest", "pallas", _digest_pallas,
                     tpu_default=True)
 

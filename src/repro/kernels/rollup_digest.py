@@ -58,6 +58,21 @@ def rollup_digest(buf: jnp.ndarray, block_p: int = 16384,
         out[0], jnp.uint32(0), jnp.bitwise_xor, (0,))
 
 
+@jax.jit
+def rollup_digest_jax(buf: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp VPU form of ``rollup_digest`` (no pallas_call): the
+    device-portable middle impl the kernel factory registers as
+    ``("rollup_digest", "jax")``.  Bit-exact with the NumPy mirror
+    ``core.engine.xor_fold_digest`` (semantics-of-record) and the Pallas
+    form above — pinned by tests/test_kernels.py.  An empty buffer folds
+    to the bare seed, matching the mirror."""
+    if buf.dtype != jnp.uint32:
+        buf = jax.lax.bitcast_convert_type(buf.astype(jnp.float32), jnp.uint32)
+    mixed = jnp.bitwise_xor(buf, buf >> 16) * jnp.uint32(0x85EBCA6B)
+    return jnp.uint32(0x9E3779B9) ^ jax.lax.reduce(
+        mixed, jnp.uint32(0), jnp.bitwise_xor, (0,))
+
+
 def _chunk_kernel(x_ref, o_ref):
     x = x_ref[...]                                # (1, rows_per_chunk, 128)
     mixed = jnp.bitwise_xor(x, x >> 16) * jnp.uint32(0x85EBCA6B)

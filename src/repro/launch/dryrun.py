@@ -23,8 +23,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.analysis.hlo_cost import analyze
 from repro.analysis.model_flops import model_flops
 from repro.configs.base import SHAPES, cell_is_skipped
@@ -117,7 +115,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True):
             print(f"cost_analysis: flops={ca.get('flops')} "
                   f"bytes={ca.get('bytes accessed')}")
             print(f"walk: flops/chip={walk.flops:.3e} bytes/chip={walk.bytes:.3e} "
-                  f"coll/chip={walk.collective_bytes:.3e} {dict(walk.collective_counts)}")
+                  f"coll/chip={walk.collective_bytes:.3e} "
+                  f"{dict(walk.collective_counts)}")
             print(f"roofline: compute={t_compute*1e3:.2f}ms "
                   f"memory={t_memory*1e3:.2f}ms coll={t_collective*1e3:.2f}ms "
                   f"dominant={dominant} "

@@ -6,18 +6,15 @@ without allocating anything.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.model import Model, build_model
 from repro.optim.optimizers import (OptimizerSpec, make_optimizer,
                                     spec_for_config)
-from repro.sharding.specs import state_pspec_tree
 
 
 class Cell(NamedTuple):

@@ -13,8 +13,6 @@ Design notes (TPU adaptation):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

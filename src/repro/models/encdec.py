@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.layers import apply_norm, dense_init, layer_norm
+from repro.models.layers import apply_norm, dense_init
 from repro.models.transformer import _maybe_remat
 
 

@@ -13,8 +13,6 @@ layout so the same scan drives both training and serving.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ Both are pure-jnp pytree transforms usable inside the jitted fl_round.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -11,7 +11,7 @@ dim's spec) so FSDP/ZeRO-3 covers optimizer memory automatically.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

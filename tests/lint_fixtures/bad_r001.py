@@ -1,0 +1,8 @@
+"""R001 fixture: StateArrays column writes with no mark_dirty pairing."""
+import numpy as np
+
+
+def credit(state, ids, amount):
+    state.balances[ids] += amount           # store without mark_dirty
+    np.add.at(state.submissions, ids, 1)    # scatter without mark_dirty
+    return state

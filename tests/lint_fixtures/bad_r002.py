@@ -1,0 +1,12 @@
+"""R002 fixture: a kernel op registered without the full impl family."""
+
+
+def register_kernel(op, impl, fn, **kw):
+    """Stand-in with the factory's signature; the rule is AST-driven."""
+
+
+def _impl_jax(x):
+    return x
+
+
+register_kernel("frobnicate_fold", "jax", _impl_jax)

@@ -1,0 +1,11 @@
+"""R003 fixture: nondeterminism on the fused replay path."""
+import time
+
+
+class FusedWindowLoop:
+    """Name-seeds the determinism sweep, like the real loop."""
+
+    def execute(self, jobs):
+        start = time.time()                             # wall clock
+        order = {id(j): i for i, j in enumerate(jobs)}  # id()-keyed dict
+        return start, order

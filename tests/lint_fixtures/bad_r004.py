@@ -1,0 +1,17 @@
+"""R004 fixture: host syncs / traced branching / donated-buffer reuse."""
+import jax
+
+
+@jax.jit
+def traced_step(x):
+    if x > 0:                   # Python branch on a traced value
+        x = x + 1
+    return x.item()             # host sync inside the traced function
+
+
+step2 = jax.jit(lambda y: y * 2.0, donate_argnums=(0,))
+
+
+def run(buf):
+    out = step2(buf)
+    return out + buf            # buf was donated to step2

@@ -1,0 +1,8 @@
+"""R005 fixture: EventLog internals mutated outside core/events.py."""
+
+
+def rewrite_history(log, ev):
+    log._events.append(ev)              # direct append past the log
+    evs = log._events
+    evs[:] = evs[:-1]                   # alias mutation
+    object.__setattr__(ev, "seq", 0)    # renumbering a frozen event

@@ -1,8 +1,6 @@
 """Aggregation (Eq. 1) + rollup engine: equivalence and integrity tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@ CPU-correctness of the trainer-per-chip configuration + serve launcher."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import REGISTRY, reduced_config
 from repro.fl.round import FLRoundSpec, build_fl_round, trainerify_pspecs

@@ -2,10 +2,9 @@
 programs and against hand-computed costs on scanned programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.analysis.hlo_cost import HloModule, analyze, parse_shapes
+from repro.analysis.hlo_cost import analyze, parse_shapes
 
 
 def _compile(fn, *args):

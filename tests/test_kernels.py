@@ -247,6 +247,21 @@ def test_dirty_fold_empty_ids():
         assert out.shape == (0,) and out.dtype == np.uint32
 
 
+@pytest.mark.parametrize("n", [0, 1, 7, 513, 4096])
+def test_rollup_digest_factory_impls_bit_exact(n):
+    """The factory's three rollup_digest impls agree bit-for-bit with the
+    NumPy semantics-of-record mirror (R002's machine-checked contract).
+    The pallas impl runs un-interpreted only on TPU, so parity for it is
+    pinned at the kernel level (test_rollup_digest_sweep); here the
+    portable numpy/jax pair must match on any backend."""
+    from repro.kernels import factory
+    rng = np.random.default_rng(2024 + n)
+    words = rng.integers(0, 2**32, n, dtype=np.uint32)
+    want = factory.get_kernel("rollup_digest", "numpy")(words)
+    got = factory.get_kernel("rollup_digest", "jax")(words)
+    assert got == want
+
+
 def test_kernel_factory_selection():
     from repro.kernels import factory
     from repro.kernels.block_pack import block_pack_np
@@ -256,6 +271,8 @@ def test_kernel_factory_selection():
     assert set(factory.available_impls("batch_seal")) == \
         {"numpy", "jax", "pallas"}
     assert set(factory.available_impls("dirty_fold")) == \
+        {"numpy", "jax", "pallas"}
+    assert set(factory.available_impls("rollup_digest")) == \
         {"numpy", "jax", "pallas"}
     with pytest.raises(KeyError, match="unknown kernel op"):
         factory.get_kernel("no_such_op")

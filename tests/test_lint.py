@@ -1,0 +1,124 @@
+"""Self-check for the repro-lint static pass (analysis/lint.py).
+
+Pins the ISSUE-9 acceptance contract: the CLI exits nonzero on each
+known-bad fixture (one per rule R001-R005), zero on the shipped
+``src/repro`` tree, suppression comments work, and the findings are
+machine-readable.  Fixtures are referenced by file name only — naming a
+fixture's kernel op here would satisfy R002's parity-test scan and
+defeat the fixture.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.invariants import CATALOG
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+SRC_REPRO = os.path.normpath(os.path.join(HERE, os.pardir, "src", "repro"))
+
+#: one known-bad fixture per static rule
+RULE_FIXTURES = {
+    "R001": "bad_r001.py",
+    "R002": "bad_r002.py",
+    "R003": "bad_r003.py",
+    "R004": "bad_r004.py",
+    "R005": "bad_r005.py",
+}
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    src = os.path.join(HERE, os.pardir, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, env=env)
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_fixture_triggers_exactly_its_rule(rule):
+    findings, n_sup = lint.scan([os.path.join(FIXTURES, RULE_FIXTURES[rule])])
+    assert findings, f"fixture for {rule} produced no findings"
+    assert {f.rule for f in findings} == {rule}
+    assert n_sup == 0
+    for f in findings:
+        assert f.hint == CATALOG[rule].fix_hint
+        assert f.line > 0
+
+
+def test_catalog_covers_every_rule():
+    static = {r for r, inv in CATALOG.items() if inv.static}
+    assert static == set(RULE_FIXTURES)
+    dynamic = {r for r, inv in CATALOG.items() if inv.dynamic}
+    assert dynamic == {"R001", "R005", "R006", "R007"}
+
+
+def test_shipped_tree_is_clean():
+    findings, _ = lint.scan([SRC_REPRO])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_nonzero_per_fixture_and_zero_on_src(tmp_path):
+    for rule, name in sorted(RULE_FIXTURES.items()):
+        out = tmp_path / f"{rule}.json"
+        res = _run_cli(os.path.join(FIXTURES, name), "--json", str(out))
+        assert res.returncode == 1, (rule, res.stdout, res.stderr)
+        payload = json.loads(out.read_text())
+        assert payload["n_findings"] >= 1
+        assert {f["rule"] for f in payload["findings"]} == {rule}
+        for f in payload["findings"]:
+            assert set(f) == {"file", "line", "col", "rule", "message",
+                              "hint"}
+    res = _run_cli(SRC_REPRO, "--quiet")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_line_suppression_and_file_suppression(tmp_path):
+    body = ("def f(state, ids):\n"
+            "    state.balances[ids] += 1.0{}\n")
+    bad = tmp_path / "bad.py"
+    bad.write_text(body.format(""))
+    findings, n_sup = lint.scan([str(bad)])
+    assert [f.rule for f in findings] == ["R001"] and n_sup == 0
+
+    sup = tmp_path / "sup.py"
+    sup.write_text(body.format("  # repro-lint: disable=R001"))
+    findings, n_sup = lint.scan([str(sup)])
+    assert findings == [] and n_sup == 1
+
+    supf = tmp_path / "supf.py"
+    supf.write_text("# repro-lint: disable-file=R001\n" + body.format(""))
+    findings, n_sup = lint.scan([str(supf)])
+    assert findings == [] and n_sup == 1
+
+
+def test_syntax_error_is_a_hard_finding(tmp_path):
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    findings, _ = lint.scan([str(broken)])
+    assert [f.rule for f in findings] == ["R000"]
+    res = _run_cli(str(broken), "--quiet")
+    assert res.returncode == 1
+
+
+def test_r001_pairing_is_accepted(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text(
+        "import numpy as np\n\n\n"
+        "def f(state, ids):\n"
+        "    state.balances[ids] += 1.0\n"
+        "    np.add.at(state.submissions, ids, 1)\n"
+        "    state.mark_dirty(ids)\n")
+    findings, _ = lint.scan([str(ok)])
+    assert findings == []
+
+
+def test_r005_splice_owner_is_exempt():
+    events = os.path.join(SRC_REPRO, "core", "events.py")
+    findings, _ = lint.scan([events])
+    assert findings == []

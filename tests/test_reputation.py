@@ -11,11 +11,9 @@ except ImportError:   # degrade: property tests skip, the rest still run
 
 from repro.core.reputation import (ReputationParams, end_of_multitask_update,
                                    end_of_task_update, init_book,
-                                   local_reputation, model_distances,
-                                   normalised_distances,
+                                   model_distances, normalised_distances,
                                    objective_reputation, subjective_opinion,
-                                   subjective_reputation, tenure_weight,
-                                   update_reputation)
+                                   tenure_weight, update_reputation)
 
 P = ReputationParams()
 

@@ -1,0 +1,178 @@
+"""Runtime sanitizer (analysis/sanitize.py): injection + clean-run pins.
+
+Each dynamic invariant class is proven *actually caught*: a toy stack is
+poisoned with one violation per rule (skipped ``mark_dirty`` -> R001,
+out-of-band event seq -> R005, gas leak -> R006, illegal receipt
+lifecycle -> R007) and the sanitizer must raise ``SanitizeViolation``
+with the matching rule id — while clean stepped, fused and fabric runs
+stay silent with the checks demonstrably executed (``n_checks``).
+Property-based forms randomize the traffic ahead of the injection;
+they degrade to skips where hypothesis is absent (see conftest.py).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro.analysis.sanitize import (ENV_FLAG, SanitizeViolation,
+                                     install_stack)
+from repro.api import ChainSpec, NodeClient, NodeSpec, ShardSpec
+from repro.core.events import BlockPacked, ProofGenerated
+
+DYNAMIC_RULES = ("R001", "R005", "R006", "R007")
+
+
+def _fresh_stack(spec=None):
+    client = NodeClient.from_spec(spec or NodeSpec())
+    san = install_stack(client.chain, client.target)
+    return client, san
+
+
+def _seed_traffic(client, n=3):
+    for i in range(n):
+        client.submit("submitLocalModel", f"s{i}")
+    client.seal()
+
+
+def _inject(rule, client):
+    """Introduce exactly one violation of ``rule`` into a primed stack."""
+    log = client.chain.events
+    if rule == "R001":
+        # column write that skips mark_dirty; the next window carries a
+        # no-state-handler tx so nothing re-dirties the poked chunk
+        client.target.state_arrays.balances[0] += 7.0
+        client.submit("bgPing", "s0")
+        client.seal()
+    elif rule == "R005":
+        # out-of-band append desynchronizes seq == position
+        log._events.append(BlockPacked(
+            seq=len(log._events) + 5, time=0.0, shard=None, height=99,
+            n_txs=0, gas_used=0, block_hash="bogus"))
+        log.emit(BlockPacked, time=1.0, height=100, n_txs=0, gas_used=0,
+                 block_hash="next")
+    elif rule == "R006":
+        client.chain.total_gas += 12345          # gas leaked out of band
+        client.chain.produce_block(1e6)          # BlockPacked runs the audit
+    elif rule == "R007":
+        log.emit(ProofGenerated, time=0.5, shard=None, job=0, batch=777,
+                 n_txs=1, digest=0, sealed_at=0.0)
+    else:                                        # pragma: no cover
+        raise AssertionError(rule)
+
+
+@pytest.mark.parametrize("rule", DYNAMIC_RULES)
+def test_injected_violation_raises_matching_rule(rule):
+    client, san = _fresh_stack()
+    _seed_traffic(client)
+    before = san.n_checks
+    assert before > 0, "sanitizer saw no events during clean traffic"
+    with pytest.raises(SanitizeViolation) as exc:
+        _inject(rule, client)
+    assert exc.value.rule == rule
+    assert rule in str(exc.value)
+
+
+@settings(max_examples=12, deadline=None)
+@given(rule=st.sampled_from(DYNAMIC_RULES), n_txs=st.integers(1, 6),
+       n_windows=st.integers(1, 3))
+def test_property_injection_caught_under_randomized_traffic(
+        rule, n_txs, n_windows):
+    client, san = _fresh_stack()
+    for _ in range(n_windows):
+        _seed_traffic(client, n=n_txs)
+    with pytest.raises(SanitizeViolation) as exc:
+        _inject(rule, client)
+    assert exc.value.rule == rule
+
+
+def test_double_proof_is_illegal():
+    client, _ = _fresh_stack()
+    _seed_traffic(client)
+    log = client.chain.events
+    proofs = [e for e in log.since(0) if e.kind == "proof_generated"]
+    if not proofs:                       # force one through the pipeline
+        client.target.settle_session()
+        proofs = [e for e in log.since(0) if e.kind == "proof_generated"]
+    assert proofs, "seeding produced no proofs to duplicate"
+    p = proofs[0]
+    with pytest.raises(SanitizeViolation) as exc:
+        log.emit(ProofGenerated, time=p.time, shard=p.shard, job=p.job,
+                 batch=p.batch, n_txs=p.n_txs, digest=p.digest,
+                 sealed_at=p.sealed_at)
+    assert exc.value.rule == "R007"
+
+
+@pytest.mark.parametrize("spec", [
+    NodeSpec(),
+    NodeSpec(chain=ChainSpec(backend="object")),
+    NodeSpec(shards=ShardSpec(count=2, fabric=True)),
+], ids=["vector", "object", "fabric-2"])
+def test_clean_session_run_stays_silent(spec):
+    client, san = _fresh_stack(spec)
+    for i in range(60):
+        client.submit("submitLocalModel", f"t{i % 5}")
+        if (i + 1) % 20 == 0:
+            client.seal()
+            client.target.settle_session()
+    client.flush()
+    client.run_until(10.0)
+    assert san.n_checks > 0
+    # the committed incremental root matches a full refold (R001 path pin)
+    st_arrays = san._state()
+    if st_arrays is not None:
+        assert st_arrays.root() == st_arrays.copy().root()
+
+
+def test_env_flag_wires_sanitizer_through_build_stack(monkeypatch):
+    monkeypatch.setenv(ENV_FLAG, "1")
+    client = NodeClient.from_spec(NodeSpec())
+    san = getattr(client.chain.events, "_sanitizer", None)
+    assert san is not None, "REPRO_SANITIZE=1 did not install the sanitizer"
+    _seed_traffic(client)
+    assert san.n_checks > 0
+    monkeypatch.setenv(ENV_FLAG, "0")
+    client2 = NodeClient.from_spec(NodeSpec())
+    assert getattr(client2.chain.events, "_sanitizer", None) is None
+
+
+def test_clean_fused_scheduler_run_stays_silent(monkeypatch):
+    """A fused Scheduler run (splice path included) under the sanitizer:
+    no violations, and the spliced stream keeps seq == position."""
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import gaussian_clusters
+    from repro.fl.cohort import VectorCohort, batched_batch_fn
+    from repro.fl.dp import DPConfig
+    from repro.fl.scheduler import Scheduler
+    from repro.fl.server import AutoDFL
+    from repro.models.mlp import TinyMLP
+    from repro.optim.optimizers import OptimizerSpec, make_optimizer
+
+    monkeypatch.setenv(ENV_FLAG, "1")
+    model = TinyMLP(16, 8, 4)
+    opt = make_optimizer(OptimizerSpec(name="sgdm", lr=0.1, grad_clip=5.0))
+    tr_x, tr_y = gaussian_clusters(256, 16, 4, seed=1, noise=0.5)
+    vx, vy = gaussian_clusters(64, 16, 4, seed=2, noise=0.5)
+    val = {"x": jnp.asarray(vx), "labels": jnp.asarray(vy)}
+
+    def bf(c, r):
+        g = np.random.default_rng((c * 9973 + r) % 2**31)
+        idx = g.integers(0, len(tr_x), 8)
+        return {"x": jnp.asarray(tr_x[idx]), "labels": jnp.asarray(tr_y[idx])}
+
+    node = AutoDFL(model, opt, 4, model.accuracy_fn(), val, spec=NodeSpec())
+    san = getattr(node.chain.events, "_sanitizer", None)
+    assert san is not None
+    cohort = VectorCohort(model, opt, batched_batch_fn(bf, local_steps=2),
+                          node.store, behaviors=["good"] * 4, local_steps=2,
+                          dp=DPConfig(noise_multiplier=0.05), seed=0)
+    sch = Scheduler(node, seal_every=2, fused=True)
+    sch.add_task("t0", cohort, rounds=2)
+    out = sch.run()
+    assert out["t0"] is not None
+    assert san.n_checks > 0
+    evs = node.chain.events.since(0)
+    assert [e.seq for e in evs] == list(range(len(evs)))

@@ -1,7 +1,5 @@
 """Fused sLSTM Pallas kernel vs the model's reference cell (interpret=True)."""
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
