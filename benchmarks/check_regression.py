@@ -53,6 +53,9 @@ FLOORS: Dict[str, float] = {
     "BENCH_shards.scaling": 1.5,
     "BENCH_shards.wall_scaling": 1.1,
     "BENCH_prover.verify_gas_reduction": 4.0,
+    # serving: honest traffic must keep >= 80% of its spam-free admitted
+    # throughput under the spam scenario (ISSUE-10 acceptance)
+    "BENCH_serve.honest_retention": 0.8,
 }
 
 # per-metric relative-drop overrides (fraction of the baseline value);
@@ -69,6 +72,10 @@ TOLERANCE: Dict[str, float] = {
     "BENCH_shards.scaling": 0.4,
     # measured per-lane seal walls: most timer-noise-exposed headline
     "BENCH_shards.wall_scaling": 0.45,
+    # admission outcomes: deterministic workload draws, but the asyncio
+    # interleaving within a window is scheduler-dependent — small band
+    "BENCH_serve.honest_retention": 0.1,
+    "BENCH_serve.admitted_tps": 0.2,
 }
 
 

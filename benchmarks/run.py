@@ -55,6 +55,10 @@ _HEADLINES = {
         "verify_gas_reduction": d["reduction"],
         "widths": d["widths"],
         "backends": sorted(d["backends"])},
+    "BENCH_serve": lambda d: {
+        "honest_retention": d["honest_retention"],
+        "admitted_tps": d["admitted_tps"],
+        "n_clients": d["n_clients"]},
     "BENCH": lambda d: {
         "entries": sorted(d["results"])},
 }

@@ -5,9 +5,10 @@ Every rule the stack enforces lives here exactly once: the AST pass
 two enforcement layers over this one table, so a rule id printed by
 either layer resolves to the same contract, rationale and fix hint.
 
-R001-R005 have a static form; R001 and R005-R007 have a dynamic form
-(some contracts — gas conservation, receipt lifecycle — only exist at
-run time, so the sanitizer carries rules the AST pass cannot).
+R001-R005 and R008 have a static form; R001 and R005-R007 have a
+dynamic form (some contracts — gas conservation, receipt lifecycle —
+only exist at run time, so the sanitizer carries rules the AST pass
+cannot).
 """
 from __future__ import annotations
 
@@ -37,6 +38,13 @@ DETERMINISM_SEED_FUNCS: Tuple[str, ...] = (
 
 #: the one module allowed to mutate EventLog internals (R005).
 EVENTLOG_OWNER_MODULE = "core/events.py"
+
+#: admission-purity sweep seeds (R008): the mempool admission layer —
+#: every method of these classes (and everything they reach) must
+#: decide on modeled time alone, never the wall clock.
+ADMISSION_SEED_CLASSES: Tuple[str, ...] = ("AdmissionController",
+                                           "PendingPool")
+ADMISSION_SEED_FUNCS: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +125,23 @@ CATALOG: Dict[str, Invariant] = {inv.rule: inv for inv in (
             "emit through EventLog.emit, and splice/renumber through "
             "EventLog.splice — never touch _events or seq directly"),
         static=True, dynamic=True,
+    ),
+    Invariant(
+        rule="R008",
+        title="admission decisions are pure functions of spec/sender/pool state",
+        rationale=(
+            "The serving layer's admission log is the determinism anchor "
+            "under concurrency: replaying it must reproduce the admitted "
+            "set exactly, and receipts/benchmarks compare runs by it.  A "
+            "wall-clock read (time.time and friends) reachable from the "
+            "admission path makes the decision depend on host scheduling "
+            "instead of the modeled window clock — the one time source "
+            "the ledgers run on."),
+        fix_hint=(
+            "pass the transaction's modeled submit time into the decision "
+            "and derive every rate/refill computation from it; wall-clock "
+            "timing belongs in the benchmarks, never in admission"),
+        static=True, dynamic=False,
     ),
     # -- dynamic-only contracts (no useful AST form) ----------------------------
     Invariant(

@@ -7,7 +7,8 @@ a NumPy semantics-of-record mirror plus device impls pinned by a parity
 test (R002), that nothing reachable from the fused record/execute or
 digest paths reads the wall clock or unseeded RNG (R003), that jitted
 functions stay free of host syncs and traced-value branching (R004),
-and that ``EventLog`` internals are mutated only by their owner (R005).
+that ``EventLog`` internals are mutated only by their owner (R005), and
+that mempool admission decisions never read the wall clock (R008).
 This pass does.
 
 Usage::
@@ -36,8 +37,9 @@ import sys
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.analysis.invariants import (
-    DETERMINISM_SEED_CLASSES, DETERMINISM_SEED_FUNCS, EVENTLOG_OWNER_MODULE,
-    MIN_IMPLS_PER_OP, REQUIRED_MIRROR_IMPL, STATE_COLUMNS, fix_hint)
+    ADMISSION_SEED_CLASSES, ADMISSION_SEED_FUNCS, DETERMINISM_SEED_CLASSES,
+    DETERMINISM_SEED_FUNCS, EVENTLOG_OWNER_MODULE, MIN_IMPLS_PER_OP,
+    REQUIRED_MIRROR_IMPL, STATE_COLUMNS, fix_hint)
 
 # ---------------------------------------------------------------------------
 # findings + suppressions
@@ -333,16 +335,17 @@ def _called_names(fn: ast.AST) -> Set[str]:
     return out
 
 
-def check_r003(mods: Sequence[Module]) -> List[Finding]:
-    # index every function by simple name; seed from the fused loop +
-    # digest path, then BFS over simple-name call edges (conservative:
-    # a matching name anywhere in the scan set counts as an edge)
+def _reach(mods: Sequence[Module], seed_classes: Sequence[str],
+           seed_funcs: Sequence[str]) -> List[Tuple[Module, ast.AST]]:
+    """Functions reachable from the seeds, BFS over simple-name call
+    edges (conservative: a matching name anywhere in the scan set counts
+    as an edge).  Shared by the R003 and R008 sweeps."""
     index: Dict[str, List[Tuple[Module, ast.AST, Optional[str]]]] = {}
     seeds: List[Tuple[Module, ast.AST]] = []
     for mod in mods:
         for fn, cls in _iter_functions(mod.tree):
             index.setdefault(fn.name, []).append((mod, fn, cls))
-            if cls in DETERMINISM_SEED_CLASSES or fn.name in DETERMINISM_SEED_FUNCS:
+            if cls in seed_classes or fn.name in seed_funcs:
                 seeds.append((mod, fn))
     # AST nodes hash by identity, so plain node sets give the identity
     # bookkeeping without id() (rule R003 applies to this file too)
@@ -359,8 +362,40 @@ def check_r003(mods: Sequence[Module]) -> List[Finding]:
             for tmod, tfn, _cls in index.get(name, ()):
                 if tfn not in reachable:
                     frontier.append((tmod, tfn))
+    return reach_list
+
+
+def _wallclock_findings(mod: Module, fn: ast.AST, rule: str) -> List[Finding]:
+    """time.time/datetime.now-family calls inside ``fn``, as ``rule``."""
     findings: List[Finding] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not isinstance(f, ast.Attribute):
+            continue
+        chain = _safe_unparse(f)
+        base = f.value
+        where = f"on a path reachable from {fn.name!r}"
+        if (isinstance(base, ast.Name) and base.id == "time"
+                and f.attr in ("time", "time_ns", "perf_counter",
+                               "monotonic", "clock")):
+            findings.append(Finding(
+                mod.path, node.lineno, node.col_offset, rule,
+                f"wall-clock read {chain}() {where}", fix_hint(rule)))
+        elif f.attr in ("now", "utcnow", "today") and "datetime" in chain:
+            findings.append(Finding(
+                mod.path, node.lineno, node.col_offset, rule,
+                f"wall-clock read {chain}() {where}", fix_hint(rule)))
+    return findings
+
+
+def check_r003(mods: Sequence[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    reach_list = _reach(mods, DETERMINISM_SEED_CLASSES,
+                        DETERMINISM_SEED_FUNCS)
     for mod, fn in reach_list:
+        findings.extend(_wallclock_findings(mod, fn, "R003"))
         has_stdlib_random = any(
             isinstance(n, ast.Import) and any(a.name == "random" for a in n.names)
             for n in ast.walk(mod.tree))
@@ -372,18 +407,7 @@ def check_r003(mods: Sequence[Module]) -> List[Finding]:
             if isinstance(f, ast.Attribute):
                 chain = _safe_unparse(f)
                 base = f.value
-                if (isinstance(base, ast.Name) and base.id == "time"
-                        and f.attr in ("time", "time_ns", "perf_counter",
-                                       "monotonic", "clock")):
-                    findings.append(Finding(
-                        mod.path, node.lineno, node.col_offset, "R003",
-                        f"wall-clock read {chain}() {where}", fix_hint("R003")))
-                elif (f.attr in ("now", "utcnow", "today")
-                      and "datetime" in chain):
-                    findings.append(Finding(
-                        mod.path, node.lineno, node.col_offset, "R003",
-                        f"wall-clock read {chain}() {where}", fix_hint("R003")))
-                elif chain.startswith(("np.random.", "numpy.random.")):
+                if chain.startswith(("np.random.", "numpy.random.")):
                     if f.attr != "default_rng":
                         findings.append(Finding(
                             mod.path, node.lineno, node.col_offset, "R003",
@@ -404,6 +428,23 @@ def check_r003(mods: Sequence[Module]) -> List[Finding]:
                     mod.path, node.lineno, node.col_offset, "R003",
                     f"id()-based keying/ordering {where} is process-"
                     f"nondeterministic", fix_hint("R003")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R008: admission-path purity (no wall clock in mempool decisions)
+
+
+def check_r008(mods: Sequence[Module]) -> List[Finding]:
+    """Admission decisions are pure functions of (spec, sender state,
+    pool state) on MODELED time: nothing reachable from the admission
+    seeds (``AdmissionController``/``PendingPool``) may read the wall
+    clock — the recorded admission log would stop replaying to the same
+    admitted set."""
+    findings: List[Finding] = []
+    for mod, fn in _reach(mods, ADMISSION_SEED_CLASSES,
+                          ADMISSION_SEED_FUNCS):
+        findings.extend(_wallclock_findings(mod, fn, "R008"))
     return findings
 
 
@@ -714,6 +755,7 @@ def scan(paths: Sequence[str]) -> Tuple[List[Finding], int]:
         findings.extend(check_r005(mod))
     findings.extend(check_r002(mods))
     findings.extend(check_r003(mods))
+    findings.extend(check_r008(mods))
     # dedupe by site+rule (several R003 seeds can reach one call site)
     seen_sites: Set[Tuple[str, int, int, str]] = set()
     unique: List[Finding] = []
@@ -738,8 +780,8 @@ def scan(paths: Sequence[str]) -> Tuple[List[Finding], int]:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro-lint",
-        description="invariant-aware static checker (rules R001-R005; "
-                    "see docs/ANALYSIS.md)")
+        description="invariant-aware static checker (rules R001-R005 + "
+                    "R008; see docs/ANALYSIS.md)")
     ap.add_argument("paths", nargs="+", help="files or directories to lint")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="also write machine-readable findings to FILE")

@@ -58,7 +58,7 @@ class StackSanitizer:
         self.rollup = rollup
         self.log = getattr(chain, "events", None)
         self.n_checks = 0                 # emissions validated (tests pin >0)
-        self._last_seq = (len(self.log._events) - 1
+        self._last_seq = (self.log.next_cursor - 1
                           if self.log is not None else -1)
         self._sealed: Set[Tuple[Any, int]] = set()     # (shard, batch)
         self._proved: Set[Tuple[Any, int]] = set()
@@ -78,12 +78,14 @@ class StackSanitizer:
 
         def splice(inserts):
             orig_splice(inserts)
+            # seq == base + position: on an unbounded log base is 0 and
+            # this is the classic seq == position contract
             for i, e in enumerate(log._events):
-                if e.seq != i:
+                if e.seq != log.base + i:
                     raise SanitizeViolation(
                         "R005", f"post-splice stream has seq {e.seq} at "
-                                f"position {i}")
-            self._last_seq = len(log._events) - 1
+                                f"position {log.base + i}")
+            self._last_seq = log.next_cursor - 1
             self._check_gas("splice")
             self.n_checks += 1
 

@@ -19,19 +19,21 @@ from repro.api.client import (RECEIPT_STATUSES, AccountView, NodeClient,
 from repro.api.factory import (build_chain, build_ledger, build_node,
                                build_stack, l1_of)
 from repro.api.presets import PRESETS, describe_presets, preset
-from repro.api.specs import (ChainSpec, DONSpec, FLTaskSpec, NodeSpec,
-                             ProverSpec, ReputationSpec, RollupSpec,
-                             ShardSpec, WorkloadSpec, as_task_spec)
+from repro.api.specs import (AdmissionSpec, ChainSpec, DONSpec, FLTaskSpec,
+                             NodeSpec, ProverSpec, ReputationSpec,
+                             RollupSpec, ServeSpec, ShardSpec, WorkloadSpec,
+                             as_task_spec)
 from repro.core.events import (AggregateVerified, BatchSealed, BlockPacked,
-                               LedgerEvent, ProofGenerated, WindowSettled)
+                               EventsDropped, LedgerEvent, ProofGenerated,
+                               WindowSettled)
 
 __all__ = [
     "AccountView", "NodeClient", "TxReceipt", "RECEIPT_STATUSES",
     "build_chain", "build_ledger", "build_node", "build_stack", "l1_of",
     "PRESETS", "describe_presets", "preset",
-    "ChainSpec", "DONSpec", "FLTaskSpec", "NodeSpec", "ProverSpec",
-    "ReputationSpec", "RollupSpec", "ShardSpec", "WorkloadSpec",
-    "as_task_spec",
+    "AdmissionSpec", "ChainSpec", "DONSpec", "FLTaskSpec", "NodeSpec",
+    "ProverSpec", "ReputationSpec", "RollupSpec", "ServeSpec", "ShardSpec",
+    "WorkloadSpec", "as_task_spec",
     "LedgerEvent", "BatchSealed", "ProofGenerated", "AggregateVerified",
-    "WindowSettled", "BlockPacked",
+    "WindowSettled", "BlockPacked", "EventsDropped",
 ]

@@ -322,19 +322,53 @@ class NodeClient:
             caps.add("fused_window_loop")
         return frozenset(caps)
 
-    def events(self, kinds=None) -> List[LedgerEvent]:
+    def events(self, kinds=None,
+               cursor: Optional[int] = None) -> List[LedgerEvent]:
         """Drain the typed events emitted since this client's last call
         (pull-based; cursors are per client, so independent consumers
         see the full stream).  ``kinds``: optional iterable of event
         kinds to keep — filtering still advances the cursor past
-        everything drained."""
+        everything drained.
+
+        ``cursor`` switches to explicit multi-consumer mode: read from
+        that position WITHOUT touching this client's own cursor (use
+        ``events_page`` when you also need the resume cursor — the
+        serving layer's events endpoint is built on it).  On a bounded
+        (ring-buffer) log a stale cursor yields a leading
+        ``EventsDropped`` marker rather than a silent skip."""
         log = self._event_log()
-        new = log.since(self._event_cursor)
-        self._event_cursor = log.next_cursor
+        if cursor is None:
+            new = log.since(self._event_cursor)
+            self._event_cursor = log.next_cursor
+        else:
+            new = log.since(int(cursor))
         if kinds is not None:
             kinds = frozenset(kinds)
             new = [e for e in new if e.kind in kinds]
         return new
+
+    def events_page(self, cursor: int = 0, kinds=None,
+                    limit: Optional[int] = None):
+        """One page of the typed event stream for an explicit consumer:
+        ``(events, next_cursor, n_dropped)``.  ``next_cursor`` resumes
+        after the last event the page covered (pass it back on the next
+        call); ``n_dropped`` counts events a bounded log evicted before
+        ``cursor`` (0 on unbounded logs — the default everywhere outside
+        serving).  ``kinds`` filters the returned events but never what
+        the cursor advances past."""
+        log = self._event_log()
+        n_dropped = log.dropped(int(cursor))
+        new = log.since(int(cursor))
+        if n_dropped:
+            new = new[1:]                 # drop the synthesized marker;
+        if limit is not None:             # n_dropped reports the gap
+            new = new[:int(limit)]
+        next_cursor = (new[-1].seq + 1 if new
+                       else max(int(cursor), log.base))
+        if kinds is not None:
+            kinds = frozenset(kinds)
+            new = [e for e in new if e.kind in kinds]
+        return new, next_cursor, n_dropped
 
     def subscribe(self, event: str, callback: Callable) -> None:
         """DEPRECATED one-release shim over the string-keyed callback

@@ -118,6 +118,23 @@ class BlockPacked(LedgerEvent):
     kind: ClassVar[str] = "block_packed"
 
 
+@dataclasses.dataclass(frozen=True)
+class EventsDropped(LedgerEvent):
+    """Overflow marker: a reader's cursor fell behind a bounded log.
+
+    Never stored in the log — ``since`` synthesizes one (``seq`` is the
+    stale cursor, ``time`` the first retained event's time) when a
+    cursor points below the ring-buffer base, so long-poll consumers see
+    the gap explicitly instead of a silent skip.  ``resume_cursor`` is
+    the oldest cursor that still resolves to retained events.
+    """
+
+    n_dropped: int
+    resume_cursor: int
+
+    kind: ClassVar[str] = "events_dropped"
+
+
 class EventLog:
     """Append-only, totally ordered typed event stream for one stack.
 
@@ -125,17 +142,37 @@ class EventLog:
     readers drain with ``since(cursor)`` + ``next_cursor`` (cursors live
     with the reader, so independent consumers never steal each other's
     events).
+
+    ``cap`` (settable any time; ``None`` = unbounded, the default every
+    stack is built with) turns the log into a bounded ring: emissions
+    past the cap evict the oldest events, ``seq`` keeps counting from
+    process start (``_base`` tracks the seq of the oldest retained
+    event), and a cursor that fell below the base gets an explicit
+    ``EventsDropped`` marker from ``since`` instead of silently reading
+    a shifted window.  Multi-consumer serving (repro/serve) is the one
+    user that sets a cap.
     """
 
-    def __init__(self):
+    def __init__(self, cap: Optional[int] = None):
         self._events: List[LedgerEvent] = []
+        self._base = 0                  # seq of _events[0]
+        self.cap = cap
+        self.n_dropped = 0              # lifetime evictions (monitoring)
 
     def emit(self, cls: Type[LedgerEvent], *, time: float,
              shard: Optional[int] = None, **fields) -> LedgerEvent:
-        ev = cls(seq=len(self._events), time=float(time), shard=shard,
-                 **fields)
+        ev = cls(seq=self._base + len(self._events), time=float(time),
+                 shard=shard, **fields)
         self._events.append(ev)
+        self._evict()
         return ev
+
+    def _evict(self) -> None:
+        if self.cap is not None and len(self._events) > self.cap:
+            n = len(self._events) - int(self.cap)
+            del self._events[:n]
+            self._base += n
+            self.n_dropped += n
 
     def splice(self, inserts) -> None:
         """Insert event runs at recorded positions and renumber ``seq ==
@@ -143,15 +180,20 @@ class EventLog:
         mutation path (rule R005: only this module touches ``_events``).
 
         ``inserts`` is a sequence of ``(position, events)`` pairs with
-        positions relative to the pre-splice stream, ascending; the
-        inserted events' ``seq`` values are ignored and rewritten.  The
-        fused window loop uses this to land deferred ``BlockPacked``
-        events exactly where the stepped path emitted them; callers must
-        not have handed out cursors past the first splice point.
+        positions in seq coordinates of the pre-splice stream, ascending
+        (callers record ``next_cursor``); the inserted events' ``seq``
+        values are ignored and rewritten.  The fused window loop uses
+        this to land deferred ``BlockPacked`` events exactly where the
+        stepped path emitted them; callers must not have handed out
+        cursors past the first splice point, and on a bounded log the
+        positions must not predate the ring base.
         """
         merged: List[LedgerEvent] = []
         prev = 0
         for pos, evs in inserts:
+            pos -= self._base
+            if pos < 0:
+                raise ValueError("splice position predates the ring base")
             if pos < prev:
                 raise ValueError("splice positions must be ascending")
             merged.extend(self._events[prev:pos])
@@ -161,13 +203,29 @@ class EventLog:
         # in-place renumber: the log owns its event objects, so rewriting
         # seq on the frozen dataclasses is unobservable to drained readers
         for i, e in enumerate(merged):
-            if e.seq != i:
-                object.__setattr__(e, "seq", i)
+            if e.seq != self._base + i:
+                object.__setattr__(e, "seq", self._base + i)
         self._events[:] = merged
+        self._evict()
 
     def since(self, cursor: int) -> List[LedgerEvent]:
-        return self._events[cursor:]
+        lo = cursor - self._base
+        if lo >= 0:
+            return self._events[lo:]
+        marker = EventsDropped(
+            seq=cursor, time=self._events[0].time if self._events else 0.0,
+            shard=None, n_dropped=-lo, resume_cursor=self._base)
+        return [marker] + self._events
+
+    def dropped(self, cursor: int) -> int:
+        """Events a reader at ``cursor`` can no longer see (0 if none)."""
+        return max(0, self._base - cursor)
+
+    @property
+    def base(self) -> int:
+        """Seq of the oldest retained event (0 on an unbounded log)."""
+        return self._base
 
     @property
     def next_cursor(self) -> int:
-        return len(self._events)
+        return self._base + len(self._events)

@@ -1,81 +1,23 @@
-"""Production serving launcher: prefill + batched KV-cache decode on the
-(pod,)data x model mesh, with the reputation gate on the request path.
+"""DEPRECATED shim: ``repro.launch.serve`` was two identities in one name.
 
-On CPU use --host-mesh --reduced (the identical sharded code path on a 1x1
-mesh); launch/dryrun.py proves the 256/512-chip lowering for the decode and
-prefill cells.
+The MODEL-inference launcher that lived here moved to
+``repro.launch.serve_model`` (same ``main``, same flags); the LEDGER
+node service is ``repro.launch.serve_node`` over ``repro.serve``.  This
+module re-exports the model launcher for one release so existing
+``from repro.launch.serve import main`` imports keep working — see
+docs/MIGRATION.md.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.serve_model import main  # noqa: F401  (re-export)
 
-from repro.configs.registry import REGISTRY, get_config, reduced_config
-from repro.core.reputation import ReputationParams, init_book
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models.model import build_model
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-6b", choices=sorted(REGISTRY))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=8)
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--host-mesh", action="store_true")
-    ap.add_argument("--reduced", action="store_true")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced_config(cfg)
-    assert cfg.input_mode == "tokens" and not cfg.enc_dec and \
-        cfg.family != "conv", "token-LM serving path"
-
-    mesh = make_host_mesh() if args.host_mesh \
-        else make_production_mesh(multi_pod=args.multi_pod)
-    model = build_model(cfg, mesh)
-
-    # reputation gate: requests from identities below R_min are rejected
-    book = init_book(args.batch)
-    rp = ReputationParams()
-    admitted = np.asarray(book.reputation) >= rp.r_min
-    assert admitted.all(), "newcomers start above the trust line"
-
-    with mesh:
-        params = model.init_params(jax.random.key(0))
-        B = args.batch
-        max_len = args.prompt_len + args.tokens + 1
-        state = model.init_decode_state(B, max_len)
-        decode = jax.jit(model.decode, donate_argnums=(1,))
-
-        rng = np.random.default_rng(0)
-        prompts = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
-        t0 = time.time()
-        logits = None
-        for t in range(args.prompt_len):
-            logits, state = decode(params, state,
-                                   {"tokens": jnp.asarray(
-                                       prompts[:, t:t + 1], jnp.int32),
-                                    "pos": jnp.int32(t)})
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        generated = []
-        for t in range(args.prompt_len, args.prompt_len + args.tokens):
-            generated.append(np.asarray(tok)[:, 0])
-            logits, state = decode(params, state,
-                                   {"tokens": tok, "pos": jnp.int32(t)})
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        dt = time.time() - t0
-        n_steps = args.prompt_len + args.tokens
-        print(f"served {B} x {n_steps} steps in {dt:.2f}s "
-              f"({B * n_steps / dt:.1f} tok/s); sample: "
-              f"{np.stack(generated, 1)[0, :8].tolist()}")
-
+warnings.warn(
+    "repro.launch.serve is deprecated: the model-inference launcher moved "
+    "to repro.launch.serve_model; the node service is "
+    "repro.launch.serve_node (see docs/MIGRATION.md)",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,28 @@
+"""Concurrent node service: admission-controlled serving of one stack.
+
+The serving face of the reproduction (docs/SERVING.md): a stdlib-only
+asyncio JSON-RPC/HTTP server (``HttpNodeServer``) over a single-writer
+``NodeService`` that owns one ``repro.api`` stack, with the mempool
+admission layer (``AdmissionController``/``PendingPool``) in front —
+per-sender token buckets, a fee floor, reputation-gated admission and
+lowest-fee-first spam eviction, all pure functions of modeled time
+(rule R008).  Configure with ``repro.api.ServeSpec``/``AdmissionSpec``;
+launch with ``python -m repro.launch.serve_node``.
+
+    from repro.api import ServeSpec
+    from repro.serve import HttpNodeServer, NodeService
+
+    server = HttpNodeServer(NodeService(ServeSpec()), port=0)
+    host, port = await server.start()
+"""
+from repro.serve.admission import (REJECT_REASONS, AdmissionController,
+                                   Decision, PendingPool, PoolEntry)
+from repro.serve.http import HttpNodeServer, http_rpc
+from repro.serve.service import NodeService, ServeMetrics, replay_ops
+
+__all__ = [
+    "AdmissionController", "Decision", "PendingPool", "PoolEntry",
+    "REJECT_REASONS",
+    "HttpNodeServer", "http_rpc",
+    "NodeService", "ServeMetrics", "replay_ops",
+]

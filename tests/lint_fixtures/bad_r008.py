@@ -1,0 +1,22 @@
+"""Known-bad fixture: R008 — the admission path reads the wall clock.
+
+The token-bucket refill below uses ``time.time()`` instead of the
+transaction's modeled submit time, so the admitted set depends on host
+scheduling and the recorded admission log stops replaying."""
+import time
+
+
+class AdmissionController:
+    def __init__(self, rate, burst):
+        self.rate, self.burst = rate, burst
+        self.tokens, self.last = burst, 0.0
+
+    def admit(self, fee):
+        now = time.time()                     # wall clock in a decision
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.last) * self.rate)
+        self.last = now
+        if self.tokens < 1.0:
+            return False
+        self.tokens -= 1.0
+        return fee > 0

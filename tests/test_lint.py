@@ -1,7 +1,7 @@
 """Self-check for the repro-lint static pass (analysis/lint.py).
 
 Pins the ISSUE-9 acceptance contract: the CLI exits nonzero on each
-known-bad fixture (one per rule R001-R005), zero on the shipped
+known-bad fixture (one per static rule, R001-R005 and R008), zero on the shipped
 ``src/repro`` tree, suppression comments work, and the findings are
 machine-readable.  Fixtures are referenced by file name only — naming a
 fixture's kernel op here would satisfy R002's parity-test scan and
@@ -28,6 +28,7 @@ RULE_FIXTURES = {
     "R003": "bad_r003.py",
     "R004": "bad_r004.py",
     "R005": "bad_r005.py",
+    "R008": "bad_r008.py",
 }
 
 

@@ -1,0 +1,407 @@
+"""Serving-layer contract tests (repro/serve + the event ring).
+
+Pins the ISSUE-10 acceptance criteria:
+
+  * every admission rule rejects for ITS reason and only fires in the
+    documented ladder order (fee floor -> reputation gate -> token
+    bucket -> pool cap), with lowest-fee-first eviction under a strict
+    fee comparison;
+  * the bounded ``EventLog`` ring keeps absolute cursors, reports
+    evictions through an explicit ``EventsDropped`` marker, and the
+    default unbounded log keeps the seed's drain semantics;
+  * N async clients racing into ``NodeService`` produce the SAME state
+    root and L1 gas total as ``replay_ops`` replaying the recorded op
+    log serially — on the vector and the sharded-fabric backends;
+  * a full writer queue is an explicit ``overloaded`` reply (HTTP 429
+    at the serving edge), not silent buffering.
+"""
+import asyncio
+
+import pytest
+
+from repro.api import (AdmissionSpec, NodeSpec, ServeSpec, ShardSpec,
+                       NodeClient)
+from repro.core.events import BlockPacked, EventLog, EventsDropped
+from repro.core.reputation import ReputationParams
+from repro.serve import (AdmissionController, HttpNodeServer, NodeService,
+                         PendingPool, http_rpc, replay_ops)
+
+REP = ReputationParams()          # r_min=0.4, r_init=0.5
+OK_REP = 0.9                      # comfortably above the trust line
+LOW_REP = 0.1                     # below r_min
+
+
+def _ctrl(**kw):
+    return AdmissionController(AdmissionSpec(**kw), REP)
+
+
+def _admit(ctrl, ref, *, fee=100, at=0.0, sender="a", rep=OK_REP,
+           intrinsic=100, fn="submitLocalModel"):
+    return ctrl.admit(ref=ref, fn=fn, sender=sender, fee=fee,
+                      intrinsic=intrinsic, at=at, reputation=rep)
+
+
+# -- admission rules, one by one ------------------------------------------------
+
+def test_fee_floor_rejects_below_and_admits_at():
+    c = _ctrl(fee_floor=50)
+    assert _admit(c, 0, fee=49).reason == "fee_floor"
+    assert _admit(c, 1, fee=50).admitted
+    assert c.rejected["fee_floor"] == 1 and c.n_admitted == 1
+
+
+def test_rep_gate_reject_mode():
+    c = _ctrl(rep_gate="reject")
+    assert _admit(c, 0, rep=LOW_REP).reason == "reputation"
+    assert _admit(c, 1, rep=REP.r_min).admitted       # at the line is in
+    assert _admit(c, 2, rep=REP.r_init).admitted      # newcomer prior is in
+
+
+def test_rep_gate_surcharge_mode():
+    c = _ctrl(rep_gate="surcharge", rep_surcharge=1.5)
+    # low-rep sender offering intrinsic gas only: surcharge not covered
+    assert _admit(c, 0, rep=LOW_REP, fee=100, intrinsic=100).reason \
+        == "surcharge"
+    # covering 1.5x intrinsic buys admission; the offered fee is metered
+    d = _admit(c, 1, rep=LOW_REP, fee=150, intrinsic=100)
+    assert d.admitted
+    assert c.pool.entries[1].fee == 150
+    # good-rep senders never pay the surcharge
+    assert _admit(c, 2, rep=OK_REP, fee=100, intrinsic=100).admitted
+
+
+def test_rep_gate_off_ignores_reputation():
+    c = _ctrl(rep_gate="off")
+    assert _admit(c, 0, rep=0.0).admitted
+
+
+def test_token_bucket_refills_on_modeled_time():
+    c = _ctrl(rate_limit=1.0, burst=2.0)
+    assert _admit(c, 0, at=0.0).admitted
+    assert _admit(c, 1, at=0.0).admitted
+    assert _admit(c, 2, at=0.0).reason == "rate_limited"   # bucket empty
+    # other senders keep their own bucket
+    assert _admit(c, 3, at=0.0, sender="b").admitted
+    # one modeled second refills one token at rate_limit=1.0
+    assert _admit(c, 4, at=1.0).admitted
+    assert _admit(c, 5, at=1.0).reason == "rate_limited"
+    assert c.rejected["rate_limited"] == 2
+
+
+def test_pool_cap_evicts_lowest_fee_on_strictly_higher_offer():
+    c = _ctrl(pool_cap=2, burst=100.0)
+    _admit(c, 0, fee=10)
+    _admit(c, 1, fee=20)
+    # equal to the cheapest pooled fee must NOT churn the pool
+    assert _admit(c, 2, fee=10).reason == "overloaded"
+    d = _admit(c, 3, fee=15)                    # strictly beats fee=10
+    assert d.admitted and d.evicted == 0
+    assert set(c.pool.entries) == {1, 3}
+    assert c.n_evicted == 1
+
+
+def test_pool_cap_without_eviction_is_overloaded():
+    c = _ctrl(pool_cap=1, evict=False, burst=100.0)
+    assert _admit(c, 0, fee=10).admitted
+    assert _admit(c, 1, fee=99).reason == "overloaded"
+    assert c.rejected["overloaded"] == 1
+
+
+def test_pool_drains_in_modeled_time_order():
+    pool = PendingPool(cap=10)
+    c = AdmissionController(AdmissionSpec(burst=100.0), REP, pool=pool)
+    _admit(c, 0, at=2.0)
+    _admit(c, 1, at=1.0)
+    _admit(c, 2, at=1.0)
+    drained = pool.drain()
+    assert [(e.at, e.ref) for e in drained] == [(1.0, 1), (1.0, 2), (2.0, 0)]
+    assert len(pool) == 0 and pool.cheapest_fee() is None
+
+
+def test_counters_cover_every_decision():
+    c = _ctrl(fee_floor=50, rate_limit=1.0, burst=1.0)
+    _admit(c, 0, fee=10)                        # fee_floor
+    _admit(c, 1, at=0.0)                        # admitted
+    _admit(c, 2, at=0.0)                        # rate_limited
+    got = c.counters()
+    assert got["admitted"] == 1
+    assert got["rejected_fee_floor"] == 1
+    assert got["rejected_rate_limited"] == 1
+    assert len(c.log) == 3                      # one row per decision
+
+
+# -- the bounded event ring -----------------------------------------------------
+
+def _packed(log, i):
+    return log.emit(BlockPacked, time=float(i), height=i, n_txs=1,
+                    gas_used=10, block_hash=f"h{i}")
+
+
+def test_ring_evicts_oldest_and_keeps_absolute_seq():
+    log = EventLog(cap=3)
+    for i in range(5):
+        _packed(log, i)
+    assert log.base == 2 and log.n_dropped == 2
+    assert log.next_cursor == 5
+    assert [e.seq for e in log.since(2)] == [2, 3, 4]
+    assert log.dropped(0) == 2 and log.dropped(2) == 0
+
+
+def test_stale_cursor_gets_an_explicit_marker():
+    log = EventLog(cap=2)
+    for i in range(4):
+        _packed(log, i)
+    got = log.since(0)
+    assert isinstance(got[0], EventsDropped)
+    assert got[0].kind == "events_dropped"
+    assert got[0].n_dropped == 2 and got[0].resume_cursor == 2
+    assert [e.seq for e in got[1:]] == [2, 3]
+    # a live cursor never sees the marker
+    assert not isinstance(log.since(2)[0], EventsDropped)
+
+
+def test_unbounded_log_keeps_seed_semantics():
+    log = EventLog()
+    for i in range(4):
+        _packed(log, i)
+    assert log.base == 0 and log.dropped(0) == 0
+    assert [e.seq for e in log.since(0)] == [0, 1, 2, 3]
+    assert log.since(4) == []
+
+
+def test_cap_settable_after_construction():
+    log = EventLog()
+    for i in range(5):
+        _packed(log, i)
+    log.cap = 2
+    _packed(log, 5)
+    assert log.base == 4 and len(log.since(4)) == 2
+
+
+# -- NodeClient cursor modes ----------------------------------------------------
+
+def _small_client():
+    c = NodeClient.from_spec(NodeSpec())
+    for i in range(4):
+        c.submit("submitLocalModel", f"u{i}", at=0.1 * i)
+    c.flush()
+    c.run_until(5.0)
+    return c
+
+
+def test_explicit_cursor_reads_do_not_advance_the_drain():
+    c = _small_client()
+    full = c.events(cursor=0)
+    assert full, "expected a typed event stream"
+    # the per-client drain cursor is untouched by explicit-cursor reads
+    drained = c.events()
+    assert [e.seq for e in drained] == [e.seq for e in full]
+    assert c.events() == []                     # drain advanced as before
+    # ... and explicit reads still see everything afterwards
+    assert [e.seq for e in c.events(cursor=0)] == [e.seq for e in full]
+
+
+def test_events_page_paginates_with_resume_cursor():
+    c = _small_client()
+    log = c._event_log()
+    seen = []
+    cursor, n_pages = 0, 0
+    while True:
+        page, cursor, n_dropped = c.events_page(cursor, limit=3)
+        assert n_dropped == 0                   # unbounded log
+        if not page:
+            break
+        seen.extend(e.seq for e in page)
+        n_pages += 1
+    assert seen == list(range(log.next_cursor))
+    assert n_pages >= 2                         # the limit actually paged
+    # kinds filtering never stalls the cursor
+    _, nxt, _ = c.events_page(0, kinds=["no_such_kind"])
+    assert nxt == log.next_cursor
+
+
+def test_events_page_reports_ring_gap():
+    c = _small_client()
+    log = c._event_log()
+    log.cap = 2
+    log.emit(BlockPacked, time=9.0, height=99, n_txs=0, gas_used=0,
+             block_hash="x")
+    page, nxt, n_dropped = c.events_page(0)
+    assert n_dropped == log.base > 0
+    assert all(not isinstance(e, EventsDropped) for e in page)
+    assert nxt == log.next_cursor
+
+
+# -- concurrent service vs serial replay ----------------------------------------
+
+BACKENDS = {
+    "vector": lambda: NodeSpec(),
+    "fabric": lambda: NodeSpec(shards=ShardSpec(count=2, fabric=True)),
+}
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_concurrent_clients_match_serial_replay(backend):
+    spec = ServeSpec(
+        node=BACKENDS[backend](), window=0.5,
+        admission=AdmissionSpec(rate_limit=1000.0, burst=1000.0))
+
+    async def run():
+        svc = await NodeService(spec).start()
+
+        async def one_client(i):
+            out = []
+            for k in range(5):
+                r = await svc.submit("submitLocalModel", f"user{i}",
+                                     at=0.3 * k + 0.001 * i)
+                out.append(r)
+            return out
+
+        replies = await asyncio.gather(*(one_client(i) for i in range(20)))
+        await svc.close()                       # finalizes, stops the writer
+        return svc, replies
+
+    svc, replies = asyncio.run(run())
+    flat = [r for client in replies for r in client]
+    assert all(r["status"] == "queued" for r in flat)
+    assert svc.metrics.flushed == 100
+    # receipts resolve against the live ledger once flushed
+    statuses = {svc.receipt(r["ref"])["status"] for r in flat}
+    assert statuses <= {"finalized", "confirmed"}
+
+    serial = replay_ops(spec.node, svc.ops)
+    assert svc.client.state_root() == serial.state_root()
+    assert svc.client.chain.total_gas == serial.chain.total_gas
+
+
+def test_rejected_txs_never_reach_the_op_log():
+    spec = ServeSpec(node=NodeSpec(), window=1000.0,
+                     admission=AdmissionSpec(rate_limit=1.0, burst=1.0))
+
+    async def run():
+        svc = await NodeService(spec).start()
+        a = await svc.submit("submitLocalModel", "u", at=0.0)
+        b = await svc.submit("submitLocalModel", "u", at=0.0)
+        await svc.finalize()
+        return svc, a, b
+
+    svc, a, b = asyncio.run(run())
+    assert a["status"] == "queued" and b["reason"] == "rate_limited"
+    assert svc.receipt(b["ref"])["status"] == "rejected"
+    batches = [op for op in svc.ops if op[0] == "batch"]
+    assert sum(len(op[1]) for op in batches) == 1
+
+
+# -- backpressure ---------------------------------------------------------------
+
+def test_full_writer_queue_is_an_explicit_overload():
+    spec = ServeSpec(node=NodeSpec(), queue_cap=4)
+
+    async def run():
+        svc = await NodeService(spec).start()
+        # stall the writer so the op queue can actually fill
+        svc._writer.cancel()
+        try:
+            await svc._writer
+        except asyncio.CancelledError:
+            pass
+        svc._writer = None
+        pending = [asyncio.ensure_future(
+            svc.submit("submitLocalModel", f"u{i}", at=0.0))
+            for i in range(spec.queue_cap)]
+        await asyncio.sleep(0)                  # let them enqueue
+        overflow = await svc.submit("submitLocalModel", "late", at=0.0)
+        assert overflow == {"error": "overloaded",
+                            "detail": "op queue full"}
+        assert svc.metrics.queue_rejections == 1
+        await svc.start()                       # writer back: queue drains
+        replies = await asyncio.gather(*pending)
+        assert all(r["status"] == "queued" for r in replies)
+        await svc.close()
+
+    asyncio.run(run())
+
+
+# -- the HTTP face --------------------------------------------------------------
+
+def test_http_roundtrip_submit_flush_receipt_events():
+    spec = ServeSpec(node=NodeSpec(), port=0)
+
+    async def run():
+        server = HttpNodeServer(NodeService(spec))
+        host, port = await server.start()
+        st, body = await http_rpc(host, port, "submit",
+                                  {"fn": "submitLocalModel",
+                                   "sender": "alice"})
+        assert st == 200 and body["result"]["status"] == "queued"
+        ref = body["result"]["ref"]
+
+        st, body = await http_rpc(host, port, "flush")
+        assert st == 200 and body["result"]["status"] == "finalized"
+
+        st, body = await http_rpc(host, port, "receipt", {"ref": ref})
+        assert st == 200
+        assert body["result"]["status"] in ("finalized", "confirmed")
+
+        st, body = await http_rpc(host, port, "state_root")
+        assert st == 200 and body["result"]["state_root"]
+
+        st, body = await http_rpc(host, port, "get_account",
+                                  {"address": "alice"})
+        assert st == 200 and body["result"]["submissions"] == 1
+
+        st, body = await http_rpc(host, port, "events", {"cursor": 0})
+        assert st == 200 and body["result"]["events"]
+        assert body["result"]["next_cursor"] > 0
+        assert body["result"]["dropped"] == 0
+        kinds = {e["kind"] for e in body["result"]["events"]}
+        assert "block_packed" in kinds
+
+        st, body = await http_rpc(host, port, "capabilities")
+        assert st == 200 and "block_packed" in body["result"]["capabilities"]
+
+        st, body = await http_rpc(host, port, "metrics")
+        assert st == 200 and body["result"]["flushed"] == 1
+
+        st, body = await http_rpc(host, port, "no_such_method")
+        assert st == 400 and "error" in body
+        await server.close()
+
+    asyncio.run(run())
+
+
+def test_http_429_when_pool_rejects_overloaded():
+    spec = ServeSpec(node=NodeSpec(), port=0, window=1000.0,
+                     admission=AdmissionSpec(pool_cap=1, evict=False))
+
+    async def run():
+        server = HttpNodeServer(NodeService(spec))
+        host, port = await server.start()
+        st1, _ = await http_rpc(host, port, "submit",
+                                {"fn": "submitLocalModel", "sender": "a",
+                                 "at": 0.0})
+        st2, body = await http_rpc(host, port, "submit",
+                                   {"fn": "submitLocalModel", "sender": "b",
+                                    "at": 0.0})
+        assert st1 == 200 and st2 == 429
+        assert body["result"]["reason"] == "overloaded"
+        await server.close()
+
+    asyncio.run(run())
+
+
+def test_service_event_cap_bounds_the_stream():
+    spec = ServeSpec(node=NodeSpec(), event_cap=4, window=0.25,
+                     admission=AdmissionSpec(rate_limit=1000.0, burst=1000.0))
+
+    async def run():
+        svc = await NodeService(spec).start()
+        for k in range(30):
+            await svc.submit("submitLocalModel", f"u{k % 3}", at=0.05 * k)
+        await svc.close()
+        return svc, svc.events(cursor=0)
+
+    svc, page = asyncio.run(run())
+    assert page["dropped"] > 0
+    assert len(page["events"]) <= 4
+    assert page["next_cursor"] == svc.client._event_log().next_cursor
